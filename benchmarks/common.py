@@ -1,0 +1,40 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Every benchmark prints a ``name,us_per_call,derived`` CSV row (harness
+contract) and writes its full table to ``reports/benchmarks/<name>.json``.
+``--full`` sweeps the paper's complete grids; the default is a reduced
+grid sized for CI-class runtime.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports",
+                          "benchmarks")
+
+MB = 2 ** 20
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save(name: str, payload) -> str:
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    path = os.path.join(REPORT_DIR, name + ".json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.elapsed_us = (time.perf_counter() - self.t0) * 1e6

@@ -1,0 +1,68 @@
+"""Fig. 10: long-context projection via the analytical model.
+
+Workloads at 64K/128K/256K with 16/32/64MB LLCs; speedups over LRU for
+at+dbp / bypass+dbp / all.  Paper: Gemma3 peaks ≈1.30× (bypass-led);
+Llama3-class spatial cases are at-led (≈1.12×), gqa-bypass ≈ 1.0."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core import fa2_counts, get_workload, predict
+from repro.core.analytical import ModelParams
+
+from .common import MB, Timer, emit, save
+
+
+def _fitted_params() -> ModelParams:
+    path = os.path.join(os.path.dirname(__file__), "..", "reports",
+                        "benchmarks", "fig9_validation.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            p = json.load(f)["fitted_params"]
+        return ModelParams(theta1=p["theta1"], theta2=p["theta2"],
+                           theta3=p["theta3"], lam=p["lambda"])
+    return ModelParams()
+
+
+def run(full: bool = False) -> dict:
+    params = _fitted_params()
+    models = ["gemma3-27b", "llama3-70b"]
+    if full:
+        models += ["llama3-405b", "qwen3-8b"]
+    seqs = [65536, 131072, 262144]
+    sizes = [16, 32, 64]
+    policies = ["at+dbp", "bypass+dbp", "all"]
+    table = {}
+    with Timer() as t:
+        for m in models:
+            for seq in seqs:
+                wl = get_workload(m, seq_len=seq)
+                gqa = wl.group_alloc == "spatial"
+                counts = fa2_counts(wl)
+                for mb in sizes:
+                    llc = mb * MB
+                    lru = predict(counts, llc, "lru", params=params,
+                                  gqa=gqa, n_rounds=counts.n_rounds).cycles
+                    for pol in policies:
+                        pr = predict(counts, llc, pol, params=params,
+                                     gqa=gqa,
+                                     n_rounds=counts.n_rounds)
+                        key = f"{m}-{seq // 1024}K-{mb}MB-{pol}"
+                        table[key] = {
+                            "speedup_vs_lru": lru / pr.cycles,
+                            "kept_fraction": pr.kept_fraction,
+                        }
+    g = max(v["speedup_vs_lru"] for k, v in table.items()
+            if k.startswith("gemma3") and "-all" in k)
+    l = max(v["speedup_vs_lru"] for k, v in table.items()
+            if k.startswith("llama3-70b") and "-all" in k)
+    lb = max(v["speedup_vs_lru"] for k, v in table.items()
+             if k.startswith("llama3-70b") and "bypass+dbp" in k)
+    emit("fig10_longctx", t.elapsed_us,
+         f"gemma_peak_all={g:.2f}x(paper~1.30);"
+         f"llama70b_peak_all={l:.2f}x(paper~1.12);"
+         f"llama70b_gqa_bypass={lb:.2f}x(paper~1.0)")
+    save("fig10_longctx", table)
+    return table

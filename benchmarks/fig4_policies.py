@@ -1,0 +1,47 @@
+"""Fig. 4: execution time per replacement policy × LLC capacity.
+
+(a/b) Gemma3-27B temporal 2K/4K; (c/d) Qwen3-8B spatial 2K/4K.
+Default grid runs the 2K rows; ``--full`` adds 4K.
+"""
+
+from __future__ import annotations
+
+from repro.core import SimConfig, build_fa2_trace, get_workload, \
+    named_policy, run_policy
+
+from .common import MB, Timer, emit, save
+
+POLICIES = ("lru", "at", "lru+bypass", "at+bypass")
+
+
+def run(full: bool = False) -> dict:
+    cases = [("gemma3-27b", 2048), ("qwen3-8b", 2048)]
+    if full:
+        cases += [("gemma3-27b", 4096), ("qwen3-8b", 4096)]
+    sizes = (1, 2, 4, 8)
+    table = {}
+    with Timer() as t:
+        for model, seq in cases:
+            wl = get_workload(model, seq_len=seq)
+            gqa = wl.group_alloc == "spatial"
+            trace = build_fa2_trace(wl)
+            for mb in sizes:
+                cfg = SimConfig(llc_bytes=mb * MB)
+                base = None
+                for pol in POLICIES:
+                    res = run_policy(trace, named_policy(pol, gqa=gqa),
+                                     cfg, record_history=False)
+                    if base is None:
+                        base = res.cycles
+                    table[f"{model}-{seq // 1024}K-{mb}MB-{pol}"] = {
+                        "cycles": res.cycles,
+                        "speedup_vs_lru": base / res.cycles,
+                        "hit_rate": res.hit_rate,
+                    }
+    g4 = table["gemma3-27b-2K-4MB-at"]["speedup_vs_lru"]
+    q4 = table["qwen3-8b-2K-2MB-at"]["speedup_vs_lru"]
+    emit("fig4_policies", t.elapsed_us,
+         f"gemma2K_4MB_at={g4:.2f}x(paper 1.51x);"
+         f"qwen2K_2MB_at={q4:.2f}x")
+    save("fig4_policies", table)
+    return table

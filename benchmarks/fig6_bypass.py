@@ -1,0 +1,44 @@
+"""Fig. 6: dynamic bypassing vs static gears across capacities
+(Gemma3-27B temporal, normalized against fix1).
+
+Paper: no static gear wins everywhere; dynamic tracks the best.
+"""
+
+from __future__ import annotations
+
+from repro.core import SimConfig, build_fa2_trace, get_workload, \
+    named_policy, run_policy
+
+from .common import MB, Timer, emit, save
+
+
+def run(full: bool = False) -> dict:
+    seq = 4096 if full else 2048
+    wl = get_workload("gemma3-27b", seq_len=seq)
+    trace = build_fa2_trace(wl)
+    sizes = (1, 2, 4, 8)
+    policies = ("fix1", "fix2", "fix3", "at+bypass")
+    table = {}
+    with Timer() as t:
+        for mb in sizes:
+            cfg = SimConfig(llc_bytes=mb * MB)
+            ref = None
+            for pol in policies:
+                res = run_policy(trace, named_policy(pol), cfg,
+                                 record_history=False)
+                if ref is None:
+                    ref = res.cycles
+                table[f"{mb}MB-{pol}"] = {
+                    "cycles": res.cycles,
+                    "norm_vs_fix1": res.cycles / ref,
+                }
+    # dynamic should be within a few % of the best policy at every size
+    worst_gap = 0.0
+    for mb in sizes:
+        best = min(table[f"{mb}MB-{p}"]["cycles"] for p in policies)
+        dyn = table[f"{mb}MB-at+bypass"]["cycles"]
+        worst_gap = max(worst_gap, dyn / best - 1.0)
+    emit("fig6_bypass", t.elapsed_us,
+         f"dynamic_worst_gap_vs_best_static={worst_gap * 100:.1f}%")
+    save("fig6_bypass", table)
+    return table

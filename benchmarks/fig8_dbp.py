@@ -1,0 +1,40 @@
+"""Fig. 8: dead-block prediction in the multi-batch scenario
+(Gemma3-27B, 2 batches): at+bypass vs at+bypass+dbp.
+
+Paper: DBP gives 1.07×/1.19× at 4/8MB; marginal at very small caches;
+LRU best when everything fits (16MB)."""
+
+from __future__ import annotations
+
+from repro.core import SimConfig, build_fa2_trace, get_workload, \
+    named_policy, run_policy
+
+from .common import MB, Timer, emit, save
+
+
+def run(full: bool = False) -> dict:
+    seq = 4096 if full else 2048
+    wl = get_workload("gemma3-27b", seq_len=seq, n_batches=2)
+    trace = build_fa2_trace(wl)
+    sizes = (2, 4, 8, 16)
+    table = {}
+    with Timer() as t:
+        for mb in sizes:
+            cfg = SimConfig(llc_bytes=mb * MB)
+            base = run_policy(trace, named_policy("at+bypass"), cfg,
+                              record_history=False)
+            dbp = run_policy(trace, named_policy("all"), cfg,
+                             record_history=False)
+            lru = run_policy(trace, named_policy("lru"), cfg,
+                             record_history=False)
+            table[f"{mb}MB"] = {
+                "at+bypass": base.cycles, "all": dbp.cycles,
+                "lru": lru.cycles,
+                "dbp_speedup": base.cycles / dbp.cycles,
+                "dead_evictions": dbp.dead_evictions,
+            }
+    mid = {k: v["dbp_speedup"] for k, v in table.items()}
+    emit("fig8_dbp", t.elapsed_us,
+         ";".join(f"{k}={v:.3f}x" for k, v in mid.items()))
+    save("fig8_dbp", table)
+    return table

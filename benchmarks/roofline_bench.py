@@ -1,0 +1,49 @@
+"""Roofline table: aggregates the dry-run reports (launch/dryrun) into
+the EXPERIMENTS.md §Roofline table, and prints per-cell terms."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import Timer, emit, save
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "reports",
+                          "dryrun")
+
+
+def run(full: bool = False) -> dict:
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    rows = []
+    with Timer() as t:
+        for path in files:
+            with open(path) as f:
+                rec = json.load(f)
+            if rec.get("status") != "ok":
+                rows.append({"cell": os.path.basename(path)[:-5],
+                             "status": rec.get("status"),
+                             "reason": rec.get("reason",
+                                               rec.get("error", ""))[:100]})
+                continue
+            r = rec["roofline"]
+            rows.append({
+                "cell": os.path.basename(path)[:-5],
+                "status": "ok",
+                "t_compute_s": r["t_compute"],
+                "t_memory_s": r["t_memory"],
+                "t_collective_s": r["t_collective"],
+                "bottleneck": r["bottleneck"],
+                "useful_flops_ratio": r["useful_flops_ratio"],
+                "roofline_fraction": r["roofline_fraction"],
+            })
+    ok = [r for r in rows if r["status"] == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        derived = (f"cells={len(ok)};worst={worst['cell']}"
+                   f"({worst['roofline_fraction']:.3f})")
+    else:
+        derived = "no_dryrun_reports(run launch/dryrun first)"
+    emit("roofline", t.elapsed_us, derived)
+    save("roofline", rows)
+    return {"rows": rows}

@@ -1,0 +1,55 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows and writes full tables to
+reports/benchmarks/.  ``--full`` sweeps the paper's complete grids;
+``--only NAME`` runs a single benchmark.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (fig3_hitrate, fig4_policies, fig5_bbits, fig6_bypass,
+               fig7_gear, fig8_dbp, fig9_validation, fig10_longctx,
+               roofline_bench, table2_tmu)
+
+BENCHMARKS = {
+    "table2_tmu": table2_tmu.run,
+    "fig3_hitrate": fig3_hitrate.run,
+    "fig4_policies": fig4_policies.run,
+    "fig5_bbits": fig5_bbits.run,
+    "fig6_bypass": fig6_bypass.run,
+    "fig7_gear": fig7_gear.run,
+    "fig8_dbp": fig8_dbp.run,
+    "fig9_validation": fig9_validation.run,
+    "fig10_longctx": fig10_longctx.run,
+    "roofline": roofline_bench.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale grids (slow)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in BENCHMARKS.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            fn(full=args.full)
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""End-to-end training driver example: ~100M-param model, few hundred
+steps, with checkpoint/resume and the straggler watchdog.
+
+This wraps the production driver (repro.launch.train).  ~100M params on
+CPU takes a while; pass --fast for a 10M-param run.
+
+Run:  PYTHONPATH=src python examples/train_tiny_lm.py [--fast]
+"""
+
+import sys
+
+from repro.launch.train import main
+
+fast = "--fast" in sys.argv
+if fast:
+    sys.argv = [sys.argv[0], "--arch", "llama3.2-3b", "--reduce",
+                "--steps", "60", "--batch", "8", "--seq", "128",
+                "--ckpt-dir", "/tmp/repro_tiny_ckpt", "--ckpt-every", "25"]
+else:
+    # ~100M params: d_model 512, 12 layers, vocab 128256
+    sys.argv = [sys.argv[0], "--arch", "llama3.2-3b", "--reduce",
+                "--d-model", "512", "--layers", "12",
+                "--steps", "300", "--batch", "16", "--seq", "256",
+                "--ckpt-dir", "/tmp/repro_100m_ckpt", "--ckpt-every", "100"]
+main()

@@ -1,0 +1,27 @@
+"""DCO core: TMU, shared-LLC policies, cycle-level simulator, analytical
+model, and the TPU-side cache orchestrator."""
+
+from .analytical import (ModelParams, Prediction, fit_params, kendall_tau,
+                         kept_fraction, predict, r_squared)
+from .cache import CacheGeometry, SharedLLC
+from .orchestrator import CacheOrchestrator, OrchestrationPlan
+from .policies import PolicyConfig, named_policy
+from .simulator import SimConfig, SimResult, Simulator, run_policy
+from .tmu import TMU, DeadFIFO, TMUParams, TensorMeta
+from .traces import (DataflowCounts, Step, Trace, build_fa2_trace,
+                     build_matmul_trace, fa2_counts)
+from .workloads import (PAPER_WORKLOADS, SPATIAL, TEMPORAL, AttnWorkload,
+                        get_workload)
+
+__all__ = [
+    "ModelParams", "Prediction", "fit_params", "kendall_tau",
+    "kept_fraction", "predict", "r_squared",
+    "CacheGeometry", "SharedLLC",
+    "CacheOrchestrator", "OrchestrationPlan",
+    "PolicyConfig", "named_policy",
+    "SimConfig", "SimResult", "Simulator", "run_policy",
+    "TMU", "DeadFIFO", "TMUParams", "TensorMeta",
+    "DataflowCounts", "Step", "Trace", "build_fa2_trace",
+    "build_matmul_trace", "fa2_counts",
+    "PAPER_WORKLOADS", "SPATIAL", "TEMPORAL", "AttnWorkload", "get_workload",
+]

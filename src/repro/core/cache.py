@@ -1,0 +1,344 @@
+"""Shared last-level cache model (sliced, set-associative) for DCO.
+
+The LLC is modeled at cache-line granularity with vectorized numpy state so
+that paper-scale traces (hundreds of MB of traffic) simulate in seconds.
+Bursts of *unique-set* line addresses are processed in one shot; the
+simulator's bulk tile transfers are contiguous in the tiled address layout
+so a tile burst touches consecutive sets, and :meth:`SharedLLC.access_burst`
+internally splits bursts whose set indices would collide.
+
+Replacement priority (paper §IV-A): dead blocks (TMU dead FIFO match) →
+anti-thrashing lowest-``tag[B_BITS-1:0]``-tier → LRU tie-break.
+Bypass (paper §IV-D): on a miss, incoming lines whose priority is below the
+slice's ``B_GEAR`` are not allocated.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from .policies import (BYPASS_DYNAMIC, BYPASS_NONE, BYPASS_STATIC,
+                       GearController, PolicyConfig, make_controller)
+from .tmu import TMU
+
+# Access outcome codes (returned per line)
+HIT = 0
+COLD_MISS = 1
+CONFLICT_MISS = 2
+BYPASSED_COLD = 3
+BYPASSED_CONFLICT = 4
+
+_MISS_CODES = (COLD_MISS, CONFLICT_MISS, BYPASSED_COLD, BYPASSED_CONFLICT)
+
+
+@dataclass(frozen=True)
+class CacheGeometry:
+    size_bytes: int
+    line_bytes: int = 128
+    assoc: int = 8
+    n_slices: int = 32
+    # XOR set-index hashing (standard in sliced LLCs): folds tag bits into
+    # the set index so power-of-2 tensor strides don't alias onto the same
+    # sets.  tag_of is unchanged (tag = full line//num_sets), so lookups
+    # stay exact.
+    hash_sets: bool = True
+
+    @property
+    def num_lines(self) -> int:
+        return self.size_bytes // self.line_bytes
+
+    @property
+    def num_sets(self) -> int:
+        return self.num_lines // self.assoc
+
+    def __post_init__(self) -> None:
+        if self.num_lines % self.assoc:
+            raise ValueError("cache size must be a multiple of line*assoc")
+        ns = self.num_sets
+        if ns & (ns - 1):
+            raise ValueError("number of sets must be a power of two")
+
+    def set_of(self, line_addr: np.ndarray) -> np.ndarray:
+        line = line_addr // self.line_bytes
+        if self.hash_sets:
+            # Fibonacci-fold the tag into the index: within one aligned
+            # num_sets-line block the mapping stays a bijection (no
+            # intra-tile collisions), while blocks at power-of-2 strides
+            # land in decorrelated set bands.
+            tag = line // self.num_sets
+            line = line ^ (tag * 0x9E3779B1)
+        return line % self.num_sets
+
+    def tag_of(self, line_addr: np.ndarray) -> np.ndarray:
+        return (line_addr // self.line_bytes) // self.num_sets
+
+    def slice_of_set(self, set_idx: np.ndarray) -> np.ndarray:
+        return set_idx % self.n_slices
+
+
+class SharedLLC:
+    """Vectorized set-associative shared cache with DCO policies."""
+
+    def __init__(self, geom: CacheGeometry, policy: PolicyConfig,
+                 tmu: Optional[TMU] = None):
+        self.geom = geom
+        self.policy = policy
+        self.tmu = tmu
+        S, A = geom.num_sets, geom.assoc
+        self.tags = np.full((S, A), -1, dtype=np.int64)
+        self.valid = np.zeros((S, A), dtype=bool)
+        self.dirty = np.zeros((S, A), dtype=bool)
+        self.last_use = np.zeros((S, A), dtype=np.int64)
+        self.prio = np.zeros((S, A), dtype=np.int64)
+        self._clock = 0  # monotone access counter for LRU
+        self.controller: Optional[GearController] = make_controller(
+            geom.n_slices, policy)
+        self.stats: Dict[str, int] = {
+            "hits": 0, "cold_misses": 0, "conflict_misses": 0,
+            "bypassed": 0, "evictions": 0, "dead_evictions": 0,
+            "writebacks": 0,
+        }
+        self._prio_mask = (1 << policy.b_bits) - 1 if policy.b_bits else 0
+
+    # ------------------------------------------------------------------
+    def _priorities(self, tags: np.ndarray) -> np.ndarray:
+        if self.tmu is not None:
+            # TMU owns the bit slicing; mask form is identical but keeps a
+            # single source of truth for B_BITS.
+            mask = (1 << self.tmu.params.b_bits) - 1
+            return tags & mask
+        return tags & self._prio_mask
+
+    def gear_of(self, slice_ids: np.ndarray) -> np.ndarray:
+        if self.controller is None:
+            return np.zeros_like(slice_ids)
+        return self.controller.gear[slice_ids]
+
+    # ------------------------------------------------------------------
+    def access_burst(
+        self,
+        line_addrs: np.ndarray,
+        *,
+        seen_before: np.ndarray,
+        is_write=False,
+        bypass_eligible=True,
+        force_bypass=False,
+    ) -> np.ndarray:
+        """Access a burst of line addresses; returns per-line outcome codes.
+
+        ``seen_before``    bool per line: fetched from DRAM before (cold
+                           vs conflict classification, paper §V-B).
+        ``bypass_eligible`` gqa_bypass gating: only the slower core of a
+                           sharing pair may bypass (simulator decides);
+                           scalar or per-line bool array.
+        ``force_bypass``   whole-tensor bypass (TMU ``bypass_all``), e.g.
+                           Q/O tensors in FlashAttention; scalar or array.
+
+        Duplicate line addresses within one burst model MSHR behavior:
+        the second occurrence of an *allocated* line hits (MSHR/LLC hit —
+        the paper treats both classes at ``v_LLC``, §V-C), while duplicates
+        of a *bypassed* line miss again (the paper's "bypassing blindly
+        will miss some inter-core reuse opportunities", §IV-E).
+        """
+        line_addrs = np.asarray(line_addrs, dtype=np.int64)
+        out = np.empty(line_addrs.shape[0], dtype=np.int64)
+        sets = self.geom.set_of(line_addrs)
+        n = line_addrs.shape[0]
+        if n == 0:
+            return out
+        # split into chunks with unique sets so state updates don't collide
+        order = np.argsort(sets, kind="stable")
+        # fast path: all sets unique
+        if np.unique(sets).shape[0] == n:
+            out[:] = self._access_unique(line_addrs, sets, seen_before,
+                                         is_write, bypass_eligible,
+                                         force_bypass)
+            return out
+        sorted_sets = sets[order]
+        # pass index: the k-th occurrence of a set goes into chunk k
+        # (vectorized: position within the run of equal sorted sets)
+        _, first_pos, counts = np.unique(sorted_sets, return_index=True,
+                                         return_counts=True)
+        run_start = np.repeat(first_pos, counts)
+        pass_idx_sorted = np.arange(n) - run_start
+        pass_idx = np.empty(n, dtype=np.int64)
+        pass_idx[order] = pass_idx_sorted
+        max_pass = int(pass_idx_sorted.max())
+        for p in range(max_pass + 1):
+            sel = np.nonzero(pass_idx == p)[0]
+            out[sel] = self._access_unique(
+                line_addrs[sel], sets[sel],
+                _index(seen_before, sel), _index(is_write, sel),
+                _index(bypass_eligible, sel), _index(force_bypass, sel))
+        return out
+
+    # ------------------------------------------------------------------
+    def _access_unique(self, line_addrs, sets, seen_before, is_write,
+                       bypass_eligible, force_bypass) -> np.ndarray:
+        n = line_addrs.shape[0]
+        tags = self.geom.tag_of(line_addrs)
+        out = np.empty(n, dtype=np.int64)
+        is_write = np.broadcast_to(np.asarray(is_write, dtype=bool), (n,))
+        bypass_eligible = np.broadcast_to(
+            np.asarray(bypass_eligible, dtype=bool), (n,))
+        force_bypass = np.broadcast_to(
+            np.asarray(force_bypass, dtype=bool), (n,))
+        self._clock += 1
+        now = self._clock
+
+        set_tags = self.tags[sets]            # [n, A]
+        set_valid = self.valid[sets]
+        hit_mask_ways = set_valid & (set_tags == tags[:, None])
+        hit = hit_mask_ways.any(axis=1)
+        hit_way = np.argmax(hit_mask_ways, axis=1)
+
+        # --- hits: refresh LRU ------------------------------------------------
+        if hit.any():
+            hs, hw = sets[hit], hit_way[hit]
+            self.last_use[hs, hw] = now
+            w = is_write[hit]
+            if w.any():
+                self.dirty[hs[w], hw[w]] = True
+            out[hit] = HIT
+            self.stats["hits"] += int(hit.sum())
+            # hits feed the eviction-rate denominator of the gear feedback
+            self._record_controller(sets[hit], np.zeros(int(hit.sum()),
+                                                        dtype=bool))
+
+        miss = ~hit
+        if not miss.any():
+            return out
+
+        m_sets = sets[miss]
+        m_tags = tags[miss]
+        m_seen = seen_before[miss]
+        slice_ids = self.geom.slice_of_set(m_sets)
+
+        # --- bypass decision (before allocation, paper §IV-D) ----------------
+        bypass = force_bypass[miss].copy()
+        if self.policy.bypass != BYPASS_NONE:
+            gears = self.gear_of(slice_ids)
+            policy_bypass = (self._priorities(m_tags) < gears) \
+                & bypass_eligible[miss]
+            bypass |= policy_bypass
+
+        miss_codes = np.where(
+            bypass,
+            np.where(m_seen, BYPASSED_CONFLICT, BYPASSED_COLD),
+            np.where(m_seen, CONFLICT_MISS, COLD_MISS),
+        )
+        out[miss] = miss_codes
+        self.stats["bypassed"] += int(bypass.sum())
+        self.stats["cold_misses"] += int((~m_seen).sum())
+        self.stats["conflict_misses"] += int(m_seen.sum())
+
+        # --- allocation (alloc-on-fill; write-allocate) -----------------------
+        alloc = ~bypass
+        if alloc.any():
+            a_sets = m_sets[alloc]
+            a_tags = m_tags[alloc]
+            way, evicted_valid, evicted_dead = self._select_victims(a_sets)
+            # writeback accounting for dirty victims
+            wb = self.dirty[a_sets, way] & evicted_valid
+            self.stats["writebacks"] += int(wb.sum())
+            self.stats["evictions"] += int(evicted_valid.sum())
+            self.stats["dead_evictions"] += int(evicted_dead.sum())
+            self.tags[a_sets, way] = a_tags
+            self.valid[a_sets, way] = True
+            self.dirty[a_sets, way] = is_write[miss][alloc]
+            self.last_use[a_sets, way] = now
+            self.prio[a_sets, way] = self._priorities(a_tags)
+            ev_full = np.zeros(m_sets.shape[0], dtype=bool)
+            ev_full[alloc] = evicted_valid
+        else:
+            ev_full = np.zeros(m_sets.shape[0], dtype=bool)
+
+        self._record_controller(m_sets, ev_full)
+        return out
+
+    # ------------------------------------------------------------------
+    def _select_victims(self, a_sets: np.ndarray
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Vectorized victim choice: invalid → dead → anti-thrash tier → LRU.
+
+        Returns (way, evicted_valid, evicted_was_dead) per set.
+        """
+        set_valid = self.valid[a_sets]       # [n, A]
+        set_tags = self.tags[a_sets]
+        set_lru = self.last_use[a_sets]
+        set_prio = self.prio[a_sets]
+        n, A = set_valid.shape
+        BIG = np.int64(1) << 60
+
+        # 1. invalid way available → fill it (no eviction)
+        has_invalid = ~set_valid.all(axis=1)
+        invalid_way = np.argmax(~set_valid, axis=1)
+
+        # 2. dead-block prediction: victimize TMU-dead lines first (LRU among dead)
+        if self.policy.dbp and self.tmu is not None and len(self.tmu.dead_fifo):
+            fifo = np.asarray(self.tmu.dead_fifo.snapshot(), dtype=np.int64)
+            p = self.tmu.params
+            width = p.d_msb - p.d_lsb + 1
+            dead_ids = (set_tags >> p.d_lsb) & ((1 << width) - 1)
+            dead_ways = set_valid & np.isin(dead_ids, fifo)
+        else:
+            dead_ways = np.zeros((n, A), dtype=bool)
+        has_dead = dead_ways.any(axis=1)
+        dead_lru = np.where(dead_ways, set_lru, BIG)
+        dead_way = np.argmin(dead_lru, axis=1)
+
+        # 3. anti-thrashing: lowest-priority tier present, tie-break LRU
+        if self.policy.at:
+            prio_valid = np.where(set_valid, set_prio, BIG)
+            min_tier = prio_valid.min(axis=1, keepdims=True)
+            tier_ways = set_valid & (set_prio == min_tier)
+            tier_lru = np.where(tier_ways, set_lru, BIG)
+            at_way = np.argmin(tier_lru, axis=1)
+        else:
+            at_way = None
+
+        # 4. plain LRU
+        lru_vals = np.where(set_valid, set_lru, BIG)
+        lru_way = np.argmin(lru_vals, axis=1)
+
+        fallback_way = at_way if at_way is not None else lru_way
+        way = np.where(has_dead, dead_way, fallback_way)
+        way = np.where(has_invalid, invalid_way, way)
+        evicted_valid = ~has_invalid
+        evicted_dead = evicted_valid & has_dead
+        return way, evicted_valid, evicted_dead
+
+    # ------------------------------------------------------------------
+    def _record_controller(self, sets: np.ndarray, evicted: np.ndarray) -> None:
+        if self.controller is not None and sets.shape[0]:
+            self.controller.record(self.geom.slice_of_set(sets), evicted)
+
+    def tick(self, now_cycles: float) -> None:
+        if self.controller is not None:
+            self.controller.tick(now_cycles)
+
+    # ------------------------------------------------------------------
+    def hit_rate(self) -> float:
+        total = (self.stats["hits"] + self.stats["cold_misses"]
+                 + self.stats["conflict_misses"])
+        return self.stats["hits"] / total if total else 0.0
+
+    def resident_bytes(self) -> int:
+        return int(self.valid.sum()) * self.geom.line_bytes
+
+
+def _index(x, sel):
+    """Index ``x`` by ``sel`` if it is an array; pass scalars through."""
+    arr = np.asarray(x)
+    return arr[sel] if arr.ndim else x
+
+
+def is_miss(codes: np.ndarray) -> np.ndarray:
+    return codes != HIT
+
+
+def goes_to_dram(codes: np.ndarray) -> np.ndarray:
+    return np.isin(codes, _MISS_CODES)

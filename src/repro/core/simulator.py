@@ -1,0 +1,279 @@
+"""Trace-driven, burst-synchronous cycle-level simulator (paper §VI-B).
+
+System model follows Table IV: 16 cores (1 vector/tile engine + private
+SPM each), a 32-slice shared LLC (assoc 8, MSHR per slice), DDR5-3200
+×16-channel-class main memory, 2 GHz.  Cores execute bulk tile transfers
+and compute in lockstep *rounds* (one dataflow inner step per round); the
+LLC is simulated at cache-line granularity with full replacement/bypass
+state (see ``cache.py``), while time is accounted per round with the
+paper's bottleneck/overlap semantics (Eq. 1–2):
+
+    t_hit  = max(n_hit  / (N·ipc_mem),  n_hit  / v_LLC)
+    t_cold = max(n_cold / (N·ipc_mem),  n_cold / v_LLC,  n'_cold / bw_cold)
+    t_cf   = max(n_cf   / (N·ipc_mem),  n_cf   / v_LLC,  n'_cf   / bw_cf)
+    t      = t_hit + t_cold + max(t_comp, t_cf)
+
+Cold misses occur in bursts and saturate DRAM at sequential efficiency;
+conflict/capacity misses are dispersed and overlap with compute.  The
+difference from the analytical model (``analytical.py``) is that all
+``n_*`` here come from the *simulated cache state* (real evictions, dead
+blocks, per-slice gears), not from closed forms.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import cache as C
+from .cache import CacheGeometry, SharedLLC
+from .policies import PolicyConfig
+from .tmu import TMU, TMUParams, TensorMeta
+from .traces import Trace
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    """Hardware configuration (paper Table IV + DESIGN.md §7.3)."""
+
+    n_cores: int = 16
+    freq_ghz: float = 2.0
+    line_bytes: int = 128
+    llc_bytes: int = 4 * 2**20
+    llc_assoc: int = 8
+    llc_slices: int = 32
+    ipc_mem: float = 1.0              # SPM<->LLC lines issued /cycle/core
+    v_llc: float = 32.0               # LLC lines served /cycle (all slices)
+    core_flops_per_cycle: float = 16384.0  # 64x128 MAC tile engine per core
+    dram_bw_bytes_per_cycle: float = 204.8  # DDR5-3200 x16ch @2GHz
+    dram_eff_seq: float = 0.90        # burst (cold) efficiency
+    dram_eff_rand: float = 0.55       # dispersed (conflict) efficiency
+    round_overhead_cycles: float = 8.0
+    # TMU hardware parameters (Table III)
+    tmu_tensor_entries: int = 4096    # functional-model capacity; the RTL
+    tmu_tile_entries: int = 4096      # uses 8/256 with time-multiplexed
+    dead_fifo_depth: int = 16         # registration per operator
+
+    @property
+    def dram_lines_per_cycle(self) -> float:
+        return self.dram_bw_bytes_per_cycle / self.line_bytes
+
+
+@dataclass
+class SimResult:
+    name: str
+    policy: str
+    cycles: float
+    hits: int
+    mshr_hits: int
+    cold_misses: int
+    conflict_misses: int
+    bypassed: int
+    dram_lines: int
+    writebacks: int
+    dead_evictions: int
+    flops: float
+    history: Dict[str, np.ndarray] = field(default_factory=dict)
+
+    @property
+    def accesses(self) -> int:
+        return (self.hits + self.mshr_hits + self.cold_misses
+                + self.conflict_misses)
+
+    @property
+    def hit_rate(self) -> float:
+        """LLC + MSHR hits over all requests (the paper treats both hit
+        classes in a single v_LLC term, §V-C)."""
+        served = self.hits + self.mshr_hits
+        return served / self.accesses if self.accesses else 0.0
+
+    @property
+    def time_ms(self) -> float:
+        return self.cycles / 2.0e6  # 2 GHz
+
+    def summary(self) -> str:
+        return (f"{self.name:34s} {self.policy:24s} "
+                f"cycles={self.cycles:12.0f} hit={self.hit_rate:6.3f} "
+                f"dram_lines={self.dram_lines}")
+
+
+class Simulator:
+    """Run one trace under one policy."""
+
+    def __init__(self, cfg: SimConfig, policy: PolicyConfig,
+                 tmu_params: Optional[TMUParams] = None):
+        self.cfg = cfg
+        self.policy = policy
+        self.tmu_params = tmu_params or TMUParams(b_bits=policy.b_bits)
+
+    def run(self, trace: Trace, record_history: bool = True) -> SimResult:
+        cfg = self.cfg
+        geom = CacheGeometry(cfg.llc_bytes, cfg.line_bytes, cfg.llc_assoc,
+                             cfg.llc_slices)
+        tmu = TMU(line_bytes=cfg.line_bytes,
+                  tensor_entries=cfg.tmu_tensor_entries,
+                  tile_entries=cfg.tmu_tile_entries,
+                  dead_fifo_depth=cfg.dead_fifo_depth,
+                  params=self.tmu_params)
+        for meta in trace.tensors.values():
+            tmu.register(meta)
+        llc = SharedLLC(geom, self.policy, tmu=tmu)
+
+        # per-tensor "ever fetched" bitmaps for cold/conflict classification
+        seen: Dict[int, np.ndarray] = {
+            tid: np.zeros(m.size_bytes // cfg.line_bytes, dtype=bool)
+            for tid, m in trace.tensors.items()
+        }
+
+        n_rounds = trace.n_rounds
+        clock = 0.0
+        total_mshr_hits = 0
+        total_dram_lines = 0
+        total_flops = 0.0
+        hist_cycles: List[float] = []
+        hist_hits: List[int] = []
+        hist_acc: List[int] = []
+        hist_gear: List[float] = []
+
+        tensors = trace.tensors
+        line_b = cfg.line_bytes
+
+        for r in range(n_rounds):
+            addrs_parts: List[np.ndarray] = []
+            seen_parts: List[np.ndarray] = []
+            force_parts: List[np.ndarray] = []
+            elig_parts: List[np.ndarray] = []
+            write_parts: List[np.ndarray] = []
+            tll_calls: List[Tuple[int, int]] = []  # (tll_addr, tag)
+            flops_round = 0.0
+
+            contended = (llc.controller is not None
+                         and bool(llc.controller.contended().any()))
+
+            for c, steps in enumerate(trace.core_steps):
+                if r >= len(steps):
+                    continue
+                step = steps[r]
+                flops_round += step.flops
+                # gqa_bypass: only non-leader ("slower") cores bypass, and
+                # only when the LLC is contended (paper §IV-E).
+                if self.policy.gqa_variant:
+                    eligible = (not trace.core_is_leader[c]) and contended
+                else:
+                    eligible = True
+                for (tid, tile), is_store in (
+                        [(l, False) for l in step.loads]
+                        + [(s, True) for s in step.stores]):
+                    meta = tensors[tid]
+                    lines = trace.tile_lines(tid, tile)
+                    k = lines.shape[0]
+                    idx0 = (lines[0] - meta.base_addr) // line_b
+                    sv = seen[tid][idx0:idx0 + k]
+                    addrs_parts.append(lines)
+                    seen_parts.append(sv.copy())
+                    sv[:] = True
+                    force_parts.append(
+                        np.full(k, meta.bypass_all, dtype=bool))
+                    elig_parts.append(np.full(k, eligible, dtype=bool))
+                    write_parts.append(np.full(k, is_store, dtype=bool))
+                    if not is_store and not meta.bypass_all:
+                        tll_addr = meta.tile_last_line(tile, line_b)
+                        tll_calls.append(
+                            (tll_addr, int(geom.tag_of(np.int64(tll_addr)))))
+
+            if not addrs_parts:
+                clock += cfg.round_overhead_cycles
+                continue
+
+            addrs = np.concatenate(addrs_parts)
+            seen_b = np.concatenate(seen_parts)
+            force_b = np.concatenate(force_parts)
+            elig_b = np.concatenate(elig_parts)
+            write_b = np.concatenate(write_parts)
+
+            # MSHR merge: same-line requests issued in the same round are
+            # merged into one in-flight fill — policy-independent, even for
+            # bypassed lines (an MSHR entry exists for the duration of the
+            # DRAM fetch whether or not the fill allocates).  Only the
+            # first occurrence touches the cache state.
+            _, first_idx = np.unique(addrs, return_index=True)
+            n_dups = addrs.shape[0] - first_idx.shape[0]
+            total_mshr_hits += n_dups
+
+            wb_before = llc.stats["writebacks"]
+            codes = llc.access_burst(addrs[first_idx],
+                                     seen_before=seen_b[first_idx],
+                                     is_write=write_b[first_idx],
+                                     bypass_eligible=elig_b[first_idx],
+                                     force_bypass=force_b[first_idx])
+
+            for tll_addr, tag in tll_calls:
+                tmu.on_access(tll_addr, tag)
+
+            n_hit = int((codes == C.HIT).sum()) + n_dups
+            cold = int(np.isin(codes, (C.COLD_MISS, C.BYPASSED_COLD)).sum())
+            cf = int(np.isin(codes,
+                             (C.CONFLICT_MISS, C.BYPASSED_CONFLICT)).sum())
+            wb_round = llc.stats["writebacks"] - wb_before
+            dram_cold = cold
+            dram_cf = cf + wb_round
+            total_dram_lines += dram_cold + dram_cf
+            total_flops += flops_round
+
+            t = self._round_time(n_hit, cold, cf, dram_cold, dram_cf,
+                                 flops_round)
+            clock += t
+            llc.tick(clock)
+
+            if record_history:
+                hist_cycles.append(clock)
+                hist_hits.append(n_hit)
+                hist_acc.append(n_hit + cold + cf)
+                if llc.controller is not None:
+                    hist_gear.append(float(llc.controller.gear.mean()))
+
+        history = {}
+        if record_history:
+            history = {
+                "cycles": np.asarray(hist_cycles),
+                "hits": np.asarray(hist_hits, dtype=np.int64),
+                "accesses": np.asarray(hist_acc, dtype=np.int64),
+            }
+            if hist_gear:
+                history["gear"] = np.asarray(hist_gear)
+
+        return SimResult(
+            name=trace.name, policy=self.policy.name, cycles=clock,
+            hits=llc.stats["hits"], mshr_hits=total_mshr_hits,
+            cold_misses=llc.stats["cold_misses"],
+            conflict_misses=llc.stats["conflict_misses"],
+            bypassed=llc.stats["bypassed"],
+            dram_lines=total_dram_lines,
+            writebacks=llc.stats["writebacks"],
+            dead_evictions=llc.stats["dead_evictions"],
+            flops=total_flops, history=history,
+        )
+
+    # ------------------------------------------------------------------
+    def _round_time(self, n_hit: int, n_cold: int, n_cf: int,
+                    dram_cold: int, dram_cf: int, flops: float) -> float:
+        cfg = self.cfg
+        issue = cfg.n_cores * cfg.ipc_mem
+        bw = cfg.dram_lines_per_cycle
+        t_hit = max(n_hit / issue, n_hit / cfg.v_llc) if n_hit else 0.0
+        t_cold = max(n_cold / issue, n_cold / cfg.v_llc,
+                     dram_cold / (cfg.dram_eff_seq * bw)) if n_cold else 0.0
+        t_cf = max(n_cf / issue, n_cf / cfg.v_llc,
+                   dram_cf / (cfg.dram_eff_rand * bw)) if (n_cf or dram_cf) \
+            else 0.0
+        t_comp = flops / (cfg.n_cores * cfg.core_flops_per_cycle)
+        return t_hit + t_cold + max(t_comp, t_cf) + cfg.round_overhead_cycles
+
+
+def run_policy(trace: Trace, policy: PolicyConfig,
+               cfg: Optional[SimConfig] = None,
+               record_history: bool = True) -> SimResult:
+    return Simulator(cfg or SimConfig(), policy).run(
+        trace, record_history=record_history)

@@ -1,0 +1,117 @@
+"""Paper workloads (§VI-C): attention units of Gemma3-27B, Llama3-70B,
+Llama3-405B, Qwen3-8B, evaluated as FlashAttention-2 GQA dataflows.
+
+"In each attention unit, these models mainly differ in the number of Q
+heads and KV heads."  Group allocation (paper Fig. 4, §VI-C):
+
+* **temporal group allocation** — the Group dimension (Q heads sharing a
+  KV head) is mapped entirely to the time domain *on the same core*; no
+  inter-core KV sharing (used for Gemma3-27B in the paper).
+* **spatial group allocation** — the Group dimension is (at least
+  partially) spread across cores; cores share KV streams through the LLC
+  and its MSHRs (used for Qwen3-8B / Llama3 in the paper).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict
+
+TEMPORAL = "temporal"
+SPATIAL = "spatial"
+
+
+@dataclass(frozen=True)
+class AttnWorkload:
+    """One attention unit of a model, in FlashAttention-2 form."""
+
+    name: str
+    n_q_heads: int
+    n_kv_heads: int
+    head_dim: int
+    seq_len: int
+    group_alloc: str = TEMPORAL       # temporal | spatial
+    n_batches: int = 1                # >1 → the multi-batch DBP scenario (§VI-F)
+    # int8/fp8 activations: with 1-byte K/V the Gemma3-27B 2K active
+    # working set is 16 heads × 512 KB = 8 MB — exactly the paper's §VI-D2
+    # statement ("8MB, which is exactly the size of the active working
+    # set of the Gemma3-27B 2K case").
+    dtype_bytes: int = 1
+    q_block: int = 128                # Br (rows of Q per tile)
+    kv_block: int = 128               # Bc (rows of K/V per tile)
+    causal: bool = False              # the paper's dataflow streams full K/V
+
+    def __post_init__(self) -> None:
+        if self.n_q_heads % self.n_kv_heads:
+            raise ValueError("GQA requires n_q_heads % n_kv_heads == 0")
+        if self.seq_len % self.q_block or self.seq_len % self.kv_block:
+            raise ValueError("seq_len must be tile-aligned")
+        if self.group_alloc not in (TEMPORAL, SPATIAL):
+            raise ValueError(f"bad group_alloc {self.group_alloc!r}")
+
+    # -- derived quantities ------------------------------------------------
+    @property
+    def group_size(self) -> int:
+        return self.n_q_heads // self.n_kv_heads
+
+    @property
+    def n_q_tiles(self) -> int:
+        return self.seq_len // self.q_block
+
+    @property
+    def n_kv_tiles(self) -> int:
+        return self.seq_len // self.kv_block
+
+    @property
+    def kv_head_bytes(self) -> int:
+        """K + V bytes for one KV head."""
+        return 2 * self.seq_len * self.head_dim * self.dtype_bytes
+
+    @property
+    def kv_tile_bytes(self) -> int:
+        return self.kv_block * self.head_dim * self.dtype_bytes
+
+    @property
+    def q_tile_bytes(self) -> int:
+        return self.q_block * self.head_dim * self.dtype_bytes
+
+    def flops_per_inner_step(self) -> float:
+        """QK^T + softmax update + PV for one (q_tile, kv_tile) pair."""
+        qk = 2.0 * self.q_block * self.kv_block * self.head_dim
+        pv = 2.0 * self.q_block * self.kv_block * self.head_dim
+        softmax = 6.0 * self.q_block * self.kv_block
+        return qk + pv + softmax
+
+    def with_seq(self, seq_len: int) -> "AttnWorkload":
+        return replace(self, seq_len=seq_len)
+
+    def with_batches(self, n: int) -> "AttnWorkload":
+        return replace(self, n_batches=n)
+
+
+# Paper benchmark models (attention-unit shapes; GQA head counts are the
+# models' published configurations, head_dim 128 across all four).
+PAPER_WORKLOADS: Dict[str, AttnWorkload] = {
+    "gemma3-27b": AttnWorkload("gemma3-27b", n_q_heads=32, n_kv_heads=16,
+                               head_dim=128, seq_len=2048,
+                               group_alloc=TEMPORAL),
+    "qwen3-8b": AttnWorkload("qwen3-8b", n_q_heads=32, n_kv_heads=8,
+                             head_dim=128, seq_len=2048,
+                             group_alloc=SPATIAL),
+    "llama3-70b": AttnWorkload("llama3-70b", n_q_heads=64, n_kv_heads=8,
+                               head_dim=128, seq_len=2048,
+                               group_alloc=SPATIAL),
+    "llama3-405b": AttnWorkload("llama3-405b", n_q_heads=128, n_kv_heads=8,
+                                head_dim=128, seq_len=2048,
+                                group_alloc=SPATIAL),
+}
+
+
+def get_workload(name: str, seq_len: int | None = None,
+                 n_batches: int = 1) -> AttnWorkload:
+    wl = PAPER_WORKLOADS[name]
+    if seq_len is not None:
+        wl = wl.with_seq(seq_len)
+    if n_batches != 1:
+        wl = wl.with_batches(n_batches)
+    return wl

@@ -1,0 +1,14 @@
+"""Pallas-TPU kernels for the performance-critical compute layers.
+
+Each kernel package has kernel.py (pl.pallas_call + BlockSpec VMEM
+tiling), ops.py (jit wrapper) and ref.py (pure-jnp oracle).  Kernels are
+validated in interpret mode on CPU (tests/) and activate on real TPU via
+the ``use_pallas`` flag in the serve/train configs.
+"""
+
+from .decode_attention import decode_attention, decode_attention_ref
+from .flash_attention import attention_ref, flash_attention
+from .ssd_scan import ssd_ref, ssd_scan, ssd_sequential_ref
+
+__all__ = ["decode_attention", "decode_attention_ref", "attention_ref",
+           "flash_attention", "ssd_ref", "ssd_scan", "ssd_sequential_ref"]

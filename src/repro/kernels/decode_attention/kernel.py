@@ -1,0 +1,95 @@
+"""Single-token decode attention Pallas-TPU kernel.
+
+One new query token attends over a long KV cache — the inference-decode
+stress case the paper evaluates (decode_32k / long_500k shapes).  All the
+query heads of one GQA group are processed together as the (sublane)
+rows of a single MXU operand, so every fetched KV block is reused
+``group`` times from VMEM — the kernel-level counterpart of the paper's
+inter-core KV sharing captured by the shared LLC.
+
+Grid: (batch·kv_heads, n_kv_blocks); online-softmax carry (m, l, acc) in
+VMEM scratch across the sequential KV axis; KV blocks past ``cache_len``
+(scalar-prefetched) are skipped — the dead-block analogue: retired slots
+are never fetched.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                  acc_ref, *, scale: float, block_k: int, n_kv: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cache_len = len_ref[pl.program_id(0)]
+    k_off = j * block_k
+
+    @pl.when(k_off < cache_len)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)           # (group, d)
+        k = k_ref[0].astype(jnp.float32)           # (block_k, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        k_pos = k_off + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < cache_len, s, NEG_INF)
+        m_prev, l_prev = m_ref[:, 0], l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new[:, None]
+        l_ref[...] = l_new[:, None]
+
+    @pl.when(j == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def build_decode_call(*, bg: int, group: int, seq_k: int, head_dim: int,
+                      scale: float, block_k: int, dtype, interpret: bool):
+    n_kv = seq_k // block_k
+    grid = (bg, n_kv)
+    kernel = functools.partial(decode_kernel, scale=scale,
+                               block_k=block_k, n_kv=n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, group, head_dim), lambda b, j, lens: (b, 0, 0)),
+                pl.BlockSpec((1, block_k, head_dim),
+                             lambda b, j, lens: (b, j, 0)),
+                pl.BlockSpec((1, block_k, head_dim),
+                             lambda b, j, lens: (b, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, group, head_dim),
+                                   lambda b, j, lens: (b, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((group, 1), jnp.float32),
+                pltpu.VMEM((group, 1), jnp.float32),
+                pltpu.VMEM((group, head_dim), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((bg, group, head_dim), dtype),
+        interpret=interpret,
+    )

@@ -1,0 +1,43 @@
+"""jit-callable wrapper for the decode-attention kernel."""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import build_decode_call
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_k",
+                                              "interpret"))
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     cache_len: jnp.ndarray, *,
+                     scale: Optional[float] = None,
+                     block_k: int = 256,
+                     interpret: bool = False) -> jnp.ndarray:
+    """q (B, H, D) single new token; k/v (B, S, G, D) KV cache;
+    cache_len (B,) int32 valid lengths.  Returns (B, H, D)."""
+    b, h, d = q.shape
+    _, s, g, _ = k.shape
+    if h % g:
+        raise ValueError("n_heads must be divisible by n_kv_heads")
+    if s % block_k:
+        raise ValueError("cache length must be block-aligned")
+    group = h // g
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    # (B, H, D) → (B·G, group, D): one GQA group per grid row
+    qf = q.reshape(b, g, group, d).reshape(b * g, group, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * g, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * g, s, d)
+    lens = jnp.repeat(cache_len.astype(jnp.int32), g)
+
+    call = build_decode_call(bg=b * g, group=group, seq_k=s, head_dim=d,
+                             scale=scale, block_k=block_k, dtype=q.dtype,
+                             interpret=interpret)
+    of = call(lens, qf, kf, vf)
+    return of.reshape(b, g, group, d).reshape(b, h, d)

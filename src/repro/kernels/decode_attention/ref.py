@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for decode attention (one token vs KV cache)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         cache_len: jnp.ndarray, *,
+                         scale: Optional[float] = None) -> jnp.ndarray:
+    """q (B, H, D); k/v (B, S, G, D); cache_len (B,) valid prefix lengths.
+    Returns (B, H, D)."""
+    b, h, d = q.shape
+    _, s, g, _ = k.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, g, h // g, d).astype(jnp.float32)
+    sc = jnp.einsum("bgqd,btgd->bgqt", qg, k.astype(jnp.float32)) * scale
+    valid = jnp.arange(s)[None, None, None, :] < cache_len[:, None, None,
+                                                           None]
+    sc = jnp.where(valid, sc, -jnp.inf)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bgqt,btgd->bgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, d).astype(q.dtype)

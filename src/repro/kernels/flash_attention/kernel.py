@@ -1,0 +1,167 @@
+"""FlashAttention-2 forward Pallas-TPU kernel with DCO KV orchestration.
+
+TPU adaptation of the paper's policies (DESIGN.md §3):
+
+* **anti-thrashing → pinned KV prefix**: ``k_pin``/``v_pin`` enter through
+  BlockSpecs whose index_map is *constant*, so Mosaic keeps the same VMEM
+  block across all grid steps (copy elided between consecutive identical
+  indices) — the prefix is fetched from HBM exactly once per (batch,head)
+  and reused by every Q block, exactly like the LLC keeping ``S_kept``.
+* **bypass → streamed KV remainder**: ``k_str``/``v_str`` blocks are
+  re-walked per Q block (index_map depends on the innermost grid axis),
+  i.e. they never claim persistent VMEM — the cache-bypass analogue.
+* The split point comes from ``CacheOrchestrator.plan_kv_split`` (the
+  paper's ``S_kept = S_work·M/2^B_BITS ≤ budget·(A-1)/A`` rule).
+
+Grid: (batch·heads, n_q_blocks, n_stream_blocks); the streamed axis is the
+innermost (sequential) dimension, with online-softmax state in VMEM
+scratch.  The pinned region is consumed by an in-kernel loop at the first
+streamed step.
+
+MXU alignment: block_q/block_k default to 128; head_dim is padded to a
+multiple of 128 by ``ops.flash_attention`` when needed.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attend(q, k, v, m_prev, l_prev, acc, *, scale, softcap, q_off, k_off,
+            causal, block_q, block_k):
+    """One online-softmax update with block-offset causal masking."""
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    if causal:
+        q_pos = q_off + jax.lax.broadcasted_iota(jnp.int32,
+                                                 (block_q, block_k), 0)
+        k_pos = k_off + jax.lax.broadcasted_iota(jnp.int32,
+                                                 (block_q, block_k), 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + p.sum(axis=1)
+    acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def flash_kernel(q_ref, kp_ref, vp_ref, ks_ref, vs_ref, o_ref,
+                 m_ref, l_ref, acc_ref, *,
+                 scale: float, causal: bool, softcap,
+                 block_q: int, block_k: int,
+                 pinned_rows: int, n_stream: int):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    q_off = i * block_q
+
+    @pl.when(j == 0)
+    def _init():
+        m = jnp.full((block_q, 1), NEG_INF, jnp.float32)
+        l = jnp.zeros((block_q, 1), jnp.float32)
+        acc = jnp.zeros_like(acc_ref)
+        q = q_ref[0].astype(jnp.float32)
+
+        # ---- pinned prefix (VMEM-resident across the whole grid) ----
+        if pinned_rows:
+            n_pin = pinned_rows // block_k
+
+            def body(jj, carry):
+                m_c, l_c, a_c = carry
+                k = kp_ref[0, pl.dslice(jj * block_k, block_k)]
+                v = vp_ref[0, pl.dslice(jj * block_k, block_k)]
+                m2, l2, a2 = _attend(
+                    q, k.astype(jnp.float32), v, m_c[:, 0], l_c[:, 0],
+                    a_c, scale=scale, softcap=softcap, q_off=q_off,
+                    k_off=jj * block_k, causal=causal,
+                    block_q=block_q, block_k=block_k)
+                return m2[:, None], l2[:, None], a2
+
+            m, l, acc = jax.lax.fori_loop(0, n_pin, body, (m, l, acc))
+        m_ref[...] = m
+        l_ref[...] = l
+        acc_ref[...] = acc
+
+    # ---- streamed remainder (re-fetched per Q block: bypass class) ----
+    if n_stream:
+        k_off = pinned_rows + j * block_k
+
+        def _stream():
+            q = q_ref[0].astype(jnp.float32)
+            m2, l2, a2 = _attend(
+                q, ks_ref[0].astype(jnp.float32), vs_ref[0],
+                m_ref[:, 0], l_ref[:, 0], acc_ref[...],
+                scale=scale, softcap=softcap, q_off=q_off, k_off=k_off,
+                causal=causal, block_q=block_q, block_k=block_k)
+            m_ref[...] = m2[:, None]
+            l_ref[...] = l2[:, None]
+            acc_ref[...] = a2
+
+        if causal:
+            # skip fully-masked streamed blocks
+            pl.when(k_off <= q_off + block_q - 1)(_stream)
+        else:
+            _stream()
+
+    @pl.when(j == max(n_stream - 1, 0))
+    def _finalize():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def build_flash_call(*, bh: int, n_heads: int, n_kv_heads: int,
+                     seq_q: int, seq_k: int, head_dim: int,
+                     scale: float, causal: bool, softcap,
+                     pinned_rows: int, block_q: int, block_k: int,
+                     dtype, interpret: bool):
+    """Construct the pallas_call for given static shapes."""
+    group = n_heads // n_kv_heads
+    stream_rows = seq_k - pinned_rows
+    n_q = seq_q // block_q
+    n_stream = stream_rows // block_k
+    grid = (bh, n_q, max(n_stream, 1))
+
+    def kv_head(b):
+        # flattened (batch*heads) index → (batch*kv_heads) index
+        return (b // n_heads) * n_kv_heads + (b % n_heads) // group
+
+    q_spec = pl.BlockSpec((1, block_q, head_dim),
+                          lambda b, i, j: (b, i, 0))
+    pin_spec = pl.BlockSpec((1, max(pinned_rows, block_k), head_dim),
+                            lambda b, i, j: (kv_head(b), 0, 0))
+    str_spec = pl.BlockSpec((1, block_k, head_dim),
+                            lambda b, i, j: (kv_head(b), j, 0))
+    o_spec = pl.BlockSpec((1, block_q, head_dim),
+                          lambda b, i, j: (b, i, 0))
+
+    kernel = functools.partial(
+        flash_kernel, scale=scale, causal=causal, softcap=softcap,
+        block_q=block_q, block_k=block_k, pinned_rows=pinned_rows,
+        n_stream=n_stream)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[q_spec, pin_spec, pin_spec, str_spec, str_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, seq_q, head_dim), dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l
+            pltpu.VMEM((block_q, head_dim), jnp.float32),  # acc
+        ],
+        interpret=interpret,
+    )

@@ -1,0 +1,68 @@
+"""jit-callable wrapper around the flash-attention Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import build_flash_call
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "scale", "softcap", "pinned_rows", "block_q", "block_k",
+    "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True,
+                    scale: Optional[float] = None,
+                    softcap: Optional[float] = None,
+                    pinned_rows: int = 0,
+                    block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """FlashAttention-2 forward with DCO KV orchestration.
+
+    q (B, Sq, H, D); k/v (B, Sk, G, D).  ``pinned_rows`` KV rows (a
+    multiple of block_k, from ``CacheOrchestrator.plan_kv_split``) stay
+    VMEM-resident across the Q loop; the rest stream per Q block.
+    """
+    b, sq, h, d = q.shape
+    _, sk, g, _ = k.shape
+    if h % g:
+        raise ValueError("n_heads must be divisible by n_kv_heads")
+    if sq % block_q or sk % block_k:
+        raise ValueError("sequence lengths must be block-aligned")
+    if pinned_rows % block_k or not 0 <= pinned_rows <= sk:
+        raise ValueError("pinned_rows must be a block-aligned prefix")
+    if causal and sq != sk:
+        raise ValueError("causal masking assumes aligned q/k sequences; "
+                         "use decode_attention for cached decoding")
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    # layout: flatten (B, S, H, D) → (B·H, S, D)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * g, sk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * g, sk, d)
+
+    stream_rows = sk - pinned_rows
+    if pinned_rows:
+        k_pin, v_pin = kf[:, :pinned_rows], vf[:, :pinned_rows]
+    else:  # dummy one-block operand (never read: kernel skips the loop)
+        k_pin = jnp.zeros((b * g, block_k, d), kf.dtype)
+        v_pin = jnp.zeros((b * g, block_k, d), vf.dtype)
+    if stream_rows:
+        k_str, v_str = kf[:, pinned_rows:], vf[:, pinned_rows:]
+    else:
+        k_str = jnp.zeros((b * g, block_k, d), kf.dtype)
+        v_str = jnp.zeros((b * g, block_k, d), vf.dtype)
+
+    call = build_flash_call(
+        bh=b * h, n_heads=h, n_kv_heads=g, seq_q=sq, seq_k=sk,
+        head_dim=d, scale=scale, causal=causal, softcap=softcap,
+        pinned_rows=pinned_rows, block_q=block_q, block_k=block_k,
+        dtype=q.dtype, interpret=interpret)
+    of = call(qf, k_pin, v_pin, k_str, v_str)
+    return of.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

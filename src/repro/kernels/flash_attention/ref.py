@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-attention kernel (no tiling, fp32)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True,
+                  scale: Optional[float] = None,
+                  softcap: Optional[float] = None) -> jnp.ndarray:
+    """q (B, Sq, H, D); k/v (B, Sk, G, D); returns (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    _, sk, g, _ = k.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, sq, g, h // g, d).astype(jnp.float32)
+    s = jnp.einsum("bsgqd,btgd->bgqst", qg, k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), dtype=bool), k=sk - sq)
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgqst,btgd->bsgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, d).astype(q.dtype)

@@ -1,0 +1,99 @@
+"""Mamba2 SSD chunked-scan Pallas-TPU kernel.
+
+Grid: (batch·heads, n_chunks) — the chunk axis is the innermost,
+*sequential* TPU grid dimension, so the inter-chunk SSM state lives in
+VMEM scratch across chunks and is never written back to HBM until the
+final state output.  This is the orchestrator's dead-block insight applied
+to SSM state: a chunk's running state has a known one-chunk lifetime and
+therefore never claims HBM bandwidth (contrast a naive implementation
+that materializes (n_chunks, P, N) states).
+
+Per chunk (intra-chunk quadratic + state update):
+    L[i,j]   = exp(cum_i - cum_j) (causal)        — (Q, Q)
+    y_diag   = (C·Bᵀ ∘ L) (x·dt)                  — (Q, P)
+    y_off    = C · state_in · exp(cum)            — (Q, P)
+    state    = state_in·exp(total) + Bᵀ·(x·dt·decay_to_end)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
+               state_ref, *, chunk: int, n_chunks: int):
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    a = a_ref[0]                                       # (1,) — A for head
+    dt = dt_ref[0].astype(jnp.float32)                 # (Q, 1)
+    x = x_ref[0].astype(jnp.float32)                   # (Q, P)
+    B = b_ref[0].astype(jnp.float32)                   # (Q, N)
+    C = c_ref[0].astype(jnp.float32)                   # (Q, N)
+
+    da = dt[:, 0] * a                                  # (Q,)
+    cum = jnp.cumsum(da)                               # inclusive
+    total = cum[-1]
+    xd = x * dt                                        # (Q, P)
+
+    # intra-chunk: causal decay matrix L
+    seg = cum[:, None] - cum[None, :]                  # (Q, Q)
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(iota_i >= iota_j, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    y = jax.lax.dot_general(scores * L, xd, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of the carried state, then state update
+    state = state_ref[...]                             # (N, P)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        C, state, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    decay_to_end = jnp.exp(total - cum)                # (Q,)
+    new_state = state * jnp.exp(total) + jax.lax.dot_general(
+        B, xd * decay_to_end[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    state_ref[...] = new_state
+    y_ref[0, ...] = y.astype(y_ref.dtype)
+
+    @pl.when(c_idx == n_chunks - 1)
+    def _emit_state():
+        state_out_ref[0, ...] = state_ref[...]
+
+
+def build_ssd_call(*, bh: int, seq: int, p: int, n: int, chunk: int,
+                   dtype, interpret: bool):
+    n_chunks = seq // chunk
+    grid = (bh, n_chunks)
+    kernel = functools.partial(ssd_kernel, chunk=chunk, n_chunks=n_chunks)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda b, c: (b, c, 0)),   # x
+            pl.BlockSpec((1, chunk, 1), lambda b, c: (b, c, 0)),   # dt
+            pl.BlockSpec((1, 1), lambda b, c: (b, 0)),             # A
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),   # B
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),   # C
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda b, c: (b, c, 0)),   # y
+            pl.BlockSpec((1, n, p), lambda b, c: (b, 0, 0)),       # state
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, seq, p), dtype),
+            jax.ShapeDtypeStruct((bh, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )

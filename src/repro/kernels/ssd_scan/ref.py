@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the SSD scan kernel: delegates to the model's
+chunked SSD implementation (itself validated against a sequential scan in
+tests)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+            B: jnp.ndarray, C: jnp.ndarray, chunk: int
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B,S,H,P); dt (B,S,H); A (H,); B/C (B,S,G,N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    return ssd_chunked(x.astype(jnp.float32), dt.astype(jnp.float32), A,
+                       B.astype(jnp.float32), C.astype(jnp.float32), chunk)
+
+
+def ssd_sequential_ref(x, dt, A, B, C):
+    """O(S) sequential recurrence — ground truth for both implementations."""
+    import jax
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+
+    def step(state, inputs):
+        xt, dtt, Bt, Ct = inputs
+        dA = jnp.exp(dtt * A)                       # (b,h)
+        upd = jnp.einsum("bhp,bhn->bhpn", xt * dtt[..., None], Bt)
+        state = state * dA[..., None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ct)
+        return state, y
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, init, xs)
+    return ys.transpose(1, 0, 2, 3), final

@@ -1,0 +1,265 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- multi-pod dry-run: lower + compile every (arch × shape × mesh) cell ---
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init).  See DESIGN.md §5 / EXPERIMENTS.md §Dry-run.
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (ARCH_NAMES, SHAPES, cell_applicable,  # noqa: E402
+                           get_arch)
+from repro.launch import roofline as rl                          # noqa: E402
+from repro.launch.mesh import make_production_mesh               # noqa: E402
+from repro.models import (cache_logical_axes, decode_step,       # noqa: E402
+                          init_cache, init_params, prefill)
+from repro.models.model import forward, lm_loss                  # noqa: E402
+from repro.sharding import logical_spec, use_mesh                # noqa: E402
+from repro.train import (AdamWConfig, init_train_state,          # noqa: E402
+                         make_train_step, opt_logical_axes,
+                         param_logical_axes)
+
+
+def shardings_for(axes_tree, struct_tree, mesh):
+    """Logical-axes pytree + struct pytree → NamedSharding pytree
+    (shape-aware: indivisible dims fall back to replication)."""
+    def one(axes, struct):
+        if axes is None or struct is None:
+            return NamedSharding(mesh, P())
+        spec = logical_spec(tuple(axes), mesh, shape=struct.shape)
+        return NamedSharding(mesh, spec)
+
+    def is_axes_leaf(x):
+        # plain tuples are axis specs; NamedTuples (Cache) are containers
+        return x is None or (isinstance(x, tuple)
+                             and not hasattr(x, "_fields"))
+
+    return jax.tree.map(one, axes_tree, struct_tree, is_leaf=is_axes_leaf)
+
+
+
+
+def build_cell(cfg, shape, mesh):
+    """Returns (fn, arg_structs, in_shardings) for one dry-run cell."""
+    params_struct = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.key(0)))
+    p_shard = shardings_for(param_logical_axes(cfg), params_struct, mesh)
+
+    if shape.kind == "train":
+        tokens = jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len),
+                                      jnp.int32)
+        state_struct = jax.eval_shape(
+            lambda: init_train_state(
+                init_params(cfg, jax.random.key(0))))
+        opt_ax = opt_logical_axes(cfg)
+        state_shard = jax.tree.map(
+            lambda s: None, state_struct,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        state_shard = type(state_struct)(
+            params=p_shard,
+            opt=type(state_struct.opt)(
+                m=shardings_for(opt_ax, state_struct.opt.m, mesh),
+                v=shardings_for(opt_ax, state_struct.opt.v, mesh),
+                step=NamedSharding(mesh, P())))
+        tok_shard = NamedSharding(
+            mesh, logical_spec(("dp", None), mesh, tokens.shape))
+        fn = make_train_step(cfg, AdamWConfig())
+        return fn, (state_struct, tokens), (state_shard, tok_shard), \
+            {"donate_argnums": (0,)}
+
+    if shape.kind == "prefill":
+        tokens = jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len),
+                                      jnp.int32)
+        tok_shard = NamedSharding(
+            mesh, logical_spec(("dp", None), mesh, tokens.shape))
+        fn = partial(prefill, cfg=cfg)
+        return fn, (params_struct, tokens), (p_shard, tok_shard), {}
+
+    # decode: one new token against a seq_len-deep cache
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    cache_struct = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+    cache_axes = cache_logical_axes(cfg)
+    # Perf lever (§Perf iteration 1): when the KV head count divides the
+    # model axis, shard KV HEADS over model instead of the sequence —
+    # attention stays head-local and no per-layer cache resharding
+    # (all-to-all) is needed.  Sequence sharding remains the fallback for
+    # archs with few KV heads (and the long_500k batch-1 case).
+    mdl = mesh.shape.get("model", 1)
+    if (os.environ.get("REPRO_KV_HEAD_SHARD", "1") == "1"
+            and cache_axes.k is not None and cfg.n_kv_heads % mdl == 0
+            and shape.global_batch > 1):
+        cache_axes = cache_axes._replace(
+            k=(None, "dp", None, "tp", None),
+            v=(None, "dp", None, "tp", None))
+    cache_shard = shardings_for(cache_axes, cache_struct, mesh)
+    tok_shard = NamedSharding(
+        mesh, logical_spec(("dp", None), mesh, tokens.shape))
+    fn = partial(decode_step, cfg=cfg)
+    return fn, (params_struct, tokens, cache_struct), \
+        (p_shard, tok_shard, cache_shard), {"donate_argnums": (2,)}
+
+
+def loop_trips(cfg) -> list:
+    """Top-level layer-scan trip counts in program order (for the
+    while-body collective multiplier)."""
+    if cfg.family == "moe":
+        nd = cfg.moe.first_dense
+        return ([nd, cfg.n_layers - nd] if nd else [cfg.n_layers])
+    if cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.hybrid_period
+        tail = cfg.n_layers - groups * cfg.hybrid_period
+        return [groups, tail] if tail else [groups]
+    return [cfg.n_layers]
+
+
+def nested_trip(cfg) -> int:
+    return cfg.hybrid_period if cfg.family == "hybrid" else 1
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             out_dir: str, skip_existing: bool = True) -> dict:
+    shape = SHAPES[shape_name]
+    cfg = get_arch(arch_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell_id = f"{arch_name}__{shape_name}__{mesh_name}"
+    out_path = os.path.join(out_dir, cell_id + ".json")
+    if skip_existing and os.path.exists(out_path):
+        with open(out_path) as f:
+            return json.load(f)
+
+    ok, why = cell_applicable(cfg, shape)
+    record = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name}
+    if not ok:
+        record.update(status="skipped", reason=why)
+        _dump(record, out_path)
+        return record
+
+    t0 = time.time()
+    try:
+        from repro.models import model as model_mod
+        from repro.sharding import api as shard_api
+        # Perf lever (§Perf): Megatron-SP residual stream (AG+RS per
+        # block instead of AR) — opt-in for hillclimb variants.
+        shard_api.ACT_SEQ[0] = os.environ.get("REPRO_SEQ_ACT", "0") == "1"
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        with use_mesh(mesh):
+            fn, structs, in_shardings, jit_kw = build_cell(cfg, shape,
+                                                           mesh)
+            jitted = jax.jit(fn, in_shardings=in_shardings, **jit_kw)
+
+            # pass A (scanned): compile → memory analysis + collectives
+            model_mod.UNROLL_SCANS[0] = False
+            lowered = jitted.lower(*structs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            print(f"[{cell_id}] memory_analysis: {mem}")
+            hlo = compiled.as_text()
+            coll = rl.collective_bytes(hlo, main_trips=loop_trips(cfg),
+                                       nested_trip=nested_trip(cfg))
+
+            # pass B (unrolled lowering): true global FLOPs/bytes — XLA's
+            # cost analysis counts while bodies once, so the scanned form
+            # under-reports by ~n_layers× (EXPERIMENTS.md §Dry-run).
+            # NB: a fresh jax.jit wrapper — the first one caches the
+            # scanned trace.
+            model_mod.UNROLL_SCANS[0] = True
+            try:
+                cost = jax.jit(fn, in_shardings=in_shardings, **jit_kw) \
+                    .lower(*structs).cost_analysis()
+            finally:
+                model_mod.UNROLL_SCANS[0] = False
+            print(f"[{cell_id}] cost_analysis(global): flops="
+                  f"{cost.get('flops', 0):.3e} bytes="
+                  f"{cost.get('bytes accessed', 0):.3e}")
+
+        chips = mesh.size
+        entry = rl.RooflineEntry(
+            arch=arch_name, shape=shape_name, mesh=mesh_name, chips=chips,
+            flops_per_chip=float(cost.get("flops", 0.0)) / chips,
+            bytes_per_chip=float(cost.get("bytes accessed", 0.0)) / chips,
+            coll_bytes_per_chip=float(sum(coll.values())),
+            coll_breakdown=coll,
+            peak_memory_bytes=getattr(mem, "temp_size_in_bytes", None),
+            model_flops_global=rl.model_flops(cfg, shape),
+            model_bytes_global=rl.model_bytes(cfg, shape),
+        )
+        record.update(
+            status="ok",
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            memory_analysis=_mem_dict(mem),
+            roofline=entry.to_dict(),
+        )
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+    _dump(record, out_path)
+    return record
+
+
+def _mem_dict(mem) -> dict:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes")
+    return {k: getattr(mem, k, None) for k in keys}
+
+
+def _dump(record: dict, path: str) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, default=str)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_NAMES if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    summary = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, args.out,
+                               skip_existing=not args.force)
+                status = rec.get("status")
+                extra = ""
+                if status == "ok":
+                    rf = rec["roofline"]
+                    extra = (f" bottleneck={rf['bottleneck']}"
+                             f" frac={rf['roofline_fraction']:.3f}"
+                             f" compile={rec['compile_s']}s")
+                elif status == "error":
+                    extra = " " + rec["error"][:120]
+                print(f"{rec['arch']:22s} {rec['shape']:12s} "
+                      f"{rec['mesh']:8s} {status}{extra}", flush=True)
+                summary.append(rec)
+    n_ok = sum(r["status"] == "ok" for r in summary)
+    n_skip = sum(r["status"] == "skipped" for r in summary)
+    n_err = sum(r["status"] == "error" for r in summary)
+    print(f"\ncells: {len(summary)}  ok: {n_ok}  skipped(documented): "
+          f"{n_skip}  errors: {n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,345 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Target hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.  Three terms per (arch × shape × mesh):
+
+    compute    = HLO_FLOPs   / (chips × peak_FLOPs)
+    memory     = HLO_bytes   / (chips × HBM_bw)
+    collective = coll_bytes  / (chips × link_bw)
+
+``cost_analysis()`` yields per-partition FLOPs/bytes (SPMD compiles one
+program), so per-chip terms divide by 1 and global numbers multiply by
+``chips``; we record per-chip seconds (identical either way).
+Collective bytes are parsed from the optimized HLO text: the summed
+operand sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(%?[\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(",
+                     re.MULTILINE)
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes over every dtype[shape] occurrence in a type string
+    (handles tuple types)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    """Split HLO text into named computation bodies.
+
+    A computation header is ``[ENTRY] %name (params…) -> type {`` — the
+    parameter list may contain nested parens (tuple types), so we match
+    only the name prefix and the trailing ``{`` + ``->``.
+    """
+    comps: Dict[str, list] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        stripped = line.rstrip()
+        m = re.match(r"\s*(ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+        if (m and stripped.endswith("{") and "->" in stripped
+                and "=" not in stripped.split("(")[0]):
+            current = m.group(2)
+            comps[current] = []
+            continue
+        if current is not None:
+            if line.strip() == "}":
+                current = None
+                continue
+            comps[current].append(line)
+    return {k: "\n".join(v) for k, v in comps.items()}
+
+
+def _group_size(line: str, default: int = 16) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _wire_factor(kind: str, gs: int) -> float:
+    """Per-chip wire bytes per operand byte (ring algorithms).
+
+    all-gather operands are the LOCAL shard (received data ≈ (g-1)×shard);
+    all-reduce operands are the full partial (reduce-scatter + all-gather
+    phases ≈ 2·(g-1)/g×full); reduce-scatter / all-to-all move
+    (g-1)/g×full; collective-permute moves the operand once.
+    """
+    if gs <= 1:
+        return 0.0
+    return {
+        "all-gather": float(gs - 1),
+        "all-reduce": 2.0 * (gs - 1) / gs,
+        "reduce-scatter": (gs - 1) / gs,
+        "all-to-all": (gs - 1) / gs,
+        "collective-permute": 1.0,
+    }[kind]
+
+
+def _collectives_in(text: str, def_types: Dict[str, str]) -> Dict[str, int]:
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(%?[\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+?)((\.\d+)?)\(",
+                     stripped)
+        if not m:
+            continue
+        op = m.group(3)
+        base = next((c for c in _COLLECTIVES if op.startswith(c)), None)
+        if base is None:
+            continue
+        paren = stripped[stripped.index("("):stripped.index(")") + 1]
+        operands = re.findall(r"%([\w.\-]+)", paren)
+        op_bytes = 0
+        for name in operands:
+            t = def_types.get(name)
+            if t:
+                op_bytes += _shape_bytes(t)
+        if op_bytes == 0:
+            op_bytes = _shape_bytes(m.group(2))
+        gs = _group_size(line)
+        out[base] += int(op_bytes * _wire_factor(base, gs))
+    return out
+
+
+def collective_bytes(hlo_text: str,
+                     main_trips: Optional[list] = None,
+                     nested_trip: int = 1) -> Dict[str, int]:
+    """Sum operand bytes per collective kind from optimized HLO text.
+
+    Collectives inside while-loop bodies are multiplied by the loop trip
+    count: ``main_trips`` lists the trip counts of the top-level layer
+    scans in program order (XLA counts a loop body once); a while nested
+    inside another body multiplies further by ``nested_trip``.
+    """
+    def_types: Dict[str, str] = {}
+    for m in _DEF_RE.finditer(hlo_text):
+        def_types[m.group(1).lstrip("%")] = m.group(2)
+
+    comps = _split_computations(hlo_text)
+    # find while ops: (parent_comp, body_name)
+    whiles = []
+    for cname, body in comps.items():
+        for m in re.finditer(
+                r"while\(.*?\).*?body=\s*%?([\w.\-]+)", body):
+            whiles.append((cname, m.group(1)))
+    body_parents = {b: p for p, b in whiles}
+    body_names = set(body_parents)
+
+    def depth_chain(comp: str) -> int:
+        d = 0
+        while comp in body_parents:
+            d += 1
+            comp = body_parents[comp]
+        return d
+
+    # assign trip counts to top-level while bodies in program order
+    top_bodies = [b for p, b in whiles if depth_chain(p) == 0]
+    trips: Dict[str, int] = {}
+    mt = list(main_trips or [])
+    if mt and len(top_bodies) != len(mt):
+        # loop simplifier may inline trip-1 scans: drop 1s first
+        mt_eff = [t for t in mt if t != 1]
+        mt = mt_eff if len(top_bodies) == len(mt_eff) else \
+            [max(mt)] * len(top_bodies)
+    for b, t in zip(top_bodies, mt or [1] * len(top_bodies)):
+        trips[b] = t
+    for p, b in whiles:
+        if b not in trips:                       # nested
+            trips[b] = trips.get(p, 1) * nested_trip
+
+    out = {k: 0 for k in _COLLECTIVES}
+    for cname, body in comps.items():
+        mult = trips.get(cname, 1)
+        found = _collectives_in(body, def_types)
+        for k, v in found.items():
+            out[k] += v * mult
+    return out
+
+
+@dataclass
+class RooflineEntry:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_breakdown: Dict[str, int]
+    peak_memory_bytes: Optional[float]
+    model_flops_global: float
+    model_bytes_global: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful
+        (catches remat/redundancy waste)."""
+        hlo_global = self.flops_per_chip * self.chips
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    @property
+    def useful_bytes_ratio(self) -> float:
+        hlo_global = self.bytes_per_chip * self.chips
+        return self.model_bytes_global / hlo_global if hlo_global else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of roofline achieved: time the dominant resource
+        would need for the *algorithmically necessary* work (model FLOPs
+        at peak compute, or model bytes at peak HBM bw — whichever is the
+        binding floor) over the compiled dominant-term time."""
+        tmax = max(self.t_compute, self.t_memory, self.t_collective)
+        useful_c = self.model_flops_global / self.chips / PEAK_FLOPS
+        useful_m = self.model_bytes_global / self.chips / HBM_BW
+        useful = max(useful_c, useful_m)
+        return useful / tmax if tmax > 0 else 0.0
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 useful_bytes_ratio=self.useful_bytes_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) for training;
+    2·N·D for inference forward; decode counts one new token per seq."""
+    n = param_count(cfg, active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence + attention over the cache
+    tokens = shape.global_batch
+    flops = 2.0 * n * tokens
+    if cfg.n_heads:
+        apps = cfg.n_layers if cfg.hybrid_period is None \
+            else cfg.n_layers // cfg.hybrid_period
+        flops += (4.0 * cfg.n_heads * cfg.head_dim * shape.seq_len
+                  * apps * tokens)
+    return flops
+
+
+def model_bytes(cfg, shape) -> float:
+    """Algorithmically necessary global HBM traffic for one step.
+
+    train:   3 passes over params (fwd read, bwd read, update rw) in bf16
+             + moment reads/writes (fp32 m+v r/w) + activations ≈ params-
+             dominated at these batch sizes.
+    prefill: params read once (weights stream past activations) + KV write.
+    decode:  params read + FULL KV cache read (the binding term) + state.
+    """
+    n = param_count(cfg)
+    if shape.kind == "train":
+        return 3 * 2.0 * n + 4 * 4.0 * n          # bf16 passes + fp32 m,v
+    if shape.kind == "prefill":
+        kv_write = _kv_cache_bytes(cfg, shape)
+        return 2.0 * n + kv_write
+    return 2.0 * n + _kv_cache_bytes(cfg, shape) + _state_bytes(cfg, shape)
+
+
+def _kv_cache_bytes(cfg, shape) -> float:
+    if not cfg.n_heads:
+        return 0.0
+    apps = cfg.n_layers if cfg.hybrid_period is None \
+        else cfg.n_layers // cfg.hybrid_period
+    return (2.0 * apps * shape.global_batch * shape.seq_len
+            * cfg.n_kv_heads * cfg.head_dim * 2.0)
+
+
+def _state_bytes(cfg, shape) -> float:
+    if cfg.family not in ("ssm", "hybrid"):
+        return 0.0
+    di = cfg.ssm.expand * cfg.d_model
+    h = di // cfg.ssm.head_dim
+    per_l = h * cfg.ssm.head_dim * cfg.ssm.d_state * 4.0
+    return 2.0 * cfg.n_layers * shape.global_batch * per_l   # read+write
+
+
+def param_count(cfg, active_only: bool = False) -> float:
+    """Approximate parameter count from the config (embedding included
+    once; MoE counts only active experts when ``active_only``)."""
+    d = cfg.d_model
+    n = cfg.vocab * d * 2                       # embed + lm_head
+    attn = d * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.head_dim \
+        + cfg.n_heads * cfg.head_dim * d if cfg.n_heads else 0
+    if cfg.family == "dense":
+        n += cfg.n_layers * (attn + 3 * d * cfg.d_ff)
+    elif cfg.family == "moe":
+        nd = cfg.moe.first_dense
+        n += nd * (attn + 3 * d * cfg.d_ff)
+        e_active = cfg.moe.top_k if active_only else cfg.moe.n_experts
+        per_e = 3 * d * cfg.moe.d_ff_expert
+        shared = cfg.moe.n_shared * per_e
+        n += (cfg.n_layers - nd) * (attn + e_active * per_e + shared)
+    elif cfg.family in ("ssm", "hybrid"):
+        di = cfg.ssm.expand * d
+        h = di // cfg.ssm.head_dim
+        gn = cfg.ssm.n_groups * cfg.ssm.d_state
+        per_l = d * (2 * di + 2 * gn + h) + di * d
+        n += cfg.n_layers * per_l
+        if cfg.family == "hybrid":
+            n += attn + 3 * d * cfg.d_ff       # shared block (once)
+    return float(n)
+
+
+def write_report(entries, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump([e.to_dict() for e in entries], f, indent=1)

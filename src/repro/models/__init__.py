@@ -1,0 +1,8 @@
+"""Model zoo: pure-functional JAX implementations of the 10 assigned
+architectures (dense GQA / MoE / Mamba2-SSD / hybrid)."""
+
+from .model import (Cache, cache_logical_axes, decode_step, forward,
+                    init_cache, init_params, lm_loss, local_flags, prefill)
+
+__all__ = ["Cache", "cache_logical_axes", "decode_step", "forward",
+           "init_cache", "init_params", "lm_loss", "local_flags", "prefill"]

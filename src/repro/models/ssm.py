@@ -1,0 +1,238 @@
+"""Mamba2 (SSD — state-space duality) blocks in pure JAX.
+
+Implements the chunked SSD algorithm (Dao & Gu, 2024): intra-chunk
+quadratic attention-like term + inter-chunk linear state recurrence.  The
+same math is mirrored by the Pallas kernel in
+``repro.kernels.ssd_scan`` (validated against :func:`ssd_chunked`).
+
+Shapes: x (B, S, H, P); dt (B, S, H) [post-softplus]; A (H,) negative;
+B/C (B, S, G, N) with H % G == 0.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm, row_parallel_out
+from repro.sharding import act_axes, constrain
+
+
+def segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum(x[..., j+1:i+1]) for i ≥ j,
+    -inf above the diagonal."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                B: jnp.ndarray, C: jnp.ndarray, chunk: int,
+                initial_state: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan.  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, "sequence must be chunk-aligned"
+    nc = s // chunk
+    rep = h // g
+
+    xd = (x * dt[..., None]).reshape(b, nc, chunk, h, p)
+    Bc = jnp.repeat(B.reshape(b, nc, chunk, g, n), rep, axis=3)
+    Cc = jnp.repeat(C.reshape(b, nc, chunk, g, n), rep, axis=3)
+    dA = (dt * A).reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)  # (b,h,c,l)
+    dA_cs = jnp.cumsum(dA, axis=-1)
+
+    # 1. intra-chunk (quadratic within chunk)
+    L = jnp.exp(segsum(dA))                                # (b,h,c,l,l)
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp",
+                        Cc, Bc, L, xd)
+
+    # 2. per-chunk final states
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)        # (b,h,c,l)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", Bc, decay_states, xd)
+
+    # 3. inter-chunk recurrence
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), dtype=states.dtype)
+    states = jnp.concatenate([initial_state[:, None], states], axis=1)
+    chunk_decay = dA_cs[..., -1]                           # (b,h,c)
+    dc = jnp.exp(segsum(jnp.pad(chunk_decay, ((0, 0), (0, 0), (1, 0)))))
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", dc, states)
+    prev_states, final_state = new_states[:, :-1], new_states[:, -1]
+
+    # 4. inter-chunk contribution to outputs
+    state_decay = jnp.exp(dA_cs)                           # (b,h,c,l)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", Cc, prev_states,
+                       state_decay)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final_state
+
+
+def ssd_decode_step(state: jnp.ndarray, x: jnp.ndarray, dt: jnp.ndarray,
+                    A: jnp.ndarray, B: jnp.ndarray, C: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-token recurrence.  state (B,H,P,N); x (B,H,P); dt (B,H);
+    B/C (B,G,N).  Returns (y (B,H,P), new_state)."""
+    h = x.shape[1]
+    g = B.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=1)                        # (b,h,n)
+    Ch = jnp.repeat(C, rep, axis=1)
+    dA = jnp.exp(dt * A)                                   # (b,h)
+    upd = jnp.einsum("bhp,bhn->bhpn", x * dt[..., None], Bh)
+    new_state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y, new_state
+
+
+class Mamba2Cache(NamedTuple):
+    conv_x: jnp.ndarray   # (B, d_conv-1, d_inner)     — TP-sharded dim
+    conv_bc: jnp.ndarray  # (B, d_conv-1, 2·G·N)       — replicated
+    ssm: jnp.ndarray      # (B, H, P, N)               — heads TP-sharded
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Depthwise causal conv1d. x (B,S,C); w (K,C); b (C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad, w[:, None, :],                     # (K, 1, C) kernel
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return jax.nn.silu(out + b)
+
+
+def mamba2_block(params, x, spec, cache: Optional[Mamba2Cache] = None
+                 ) -> Tuple[jnp.ndarray, Optional[Mamba2Cache]]:
+    """One Mamba2 block: projections → conv → SSD → gated norm → out-proj.
+
+    The z/x/dt projections are head-sharded (TP over ``model``) while the
+    small B/C projections stay replicated — this keeps every downstream
+    split aligned with shard boundaries (DESIGN.md §5).
+
+    Train/prefill mode (cache is None or full-seq with returned cache) and
+    single-token decode mode (S == 1 with cache) share parameters.
+    """
+    b, s, d = x.shape
+    d_inner = spec.expand * d
+    h = d_inner // spec.head_dim
+    p, n, g = spec.head_dim, spec.d_state, spec.n_groups
+
+    res = rms_norm(x, params["ln"])
+    # gather the residual once (bf16) so the four column-parallel
+    # projections contract over a replicated dim — without this, each
+    # projection all-reduces an fp32 partial sum (§Perf iteration 1,
+    # zamba2 train cell: 4 AR/layer → 1 AG/layer)
+    res = constrain(res, ("dp", None, None))
+    z = constrain(jnp.einsum("bsd,de->bse", res, params["w_z"]),
+                  ("dp", None, "tp"))
+    xr = constrain(jnp.einsum("bsd,de->bse", res, params["w_x"]),
+                   ("dp", None, "tp"))
+    bc = jnp.einsum("bsd,de->bse", res, params["w_bc"])
+    dt_raw = constrain(jnp.einsum("bsd,dh->bsh", res, params["w_dt"]),
+                       ("dp", None, "tp"))
+    dt = jax.nn.softplus(dt_raw + params["dt_bias"])
+
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+
+    if cache is not None and s == 1:
+        hist_x = jnp.concatenate([cache.conv_x, xr], axis=1)   # (b,K,d_in)
+        hist_bc = jnp.concatenate([cache.conv_bc, bc], axis=1)
+        cx = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist_x,
+                                    params["conv_x_w"])
+                         + params["conv_x_b"])
+        cbc = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist_bc,
+                                     params["conv_bc_w"])
+                          + params["conv_bc_b"])
+        xs = cx.reshape(b, h, p)
+        Bv = cbc[..., :g * n].reshape(b, g, n)
+        Cv = cbc[..., g * n:].reshape(b, g, n)
+        y, new_ssm = ssd_decode_step(cache.ssm, xs.astype(jnp.float32),
+                                     dt[:, 0].astype(jnp.float32), A,
+                                     Bv.astype(jnp.float32),
+                                     Cv.astype(jnp.float32))
+        y = y[:, None]                                          # (b,1,h,p)
+        xs = xs[:, None]                                        # (b,1,h,p)
+        new_cache = Mamba2Cache(conv_x=hist_x[:, 1:],
+                                conv_bc=hist_bc[:, 1:], ssm=new_ssm)
+    else:
+        cx = _causal_conv(xr, params["conv_x_w"], params["conv_x_b"])
+        cbc = _causal_conv(bc, params["conv_bc_w"], params["conv_bc_b"])
+        xs = cx.reshape(b, s, h, p)
+        Bv = cbc[..., :g * n].reshape(b, s, g, n)
+        Cv = cbc[..., g * n:].reshape(b, s, g, n)
+        init = cache.ssm if cache is not None else None
+        y, final_state = ssd_chunked(xs.astype(jnp.float32),
+                                     dt.astype(jnp.float32), A,
+                                     Bv.astype(jnp.float32),
+                                     Cv.astype(jnp.float32),
+                                     chunk=min(spec.chunk, s),
+                                     initial_state=init)
+        new_cache = None
+        if cache is not None:
+            new_cache = Mamba2Cache(
+                conv_x=xr[:, -(spec.d_conv - 1):],
+                conv_bc=bc[:, -(spec.d_conv - 1):],
+                ssm=final_state)
+
+    y = y + xs.astype(y.dtype) * params["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["out_ln"])
+    rp = row_parallel_out(y, params["w_out"])
+    if rp is not None:
+        return rp, new_cache
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    return constrain(out, act_axes()), new_cache
+
+
+def init_mamba2_params(key, d_model: int, spec, dtype=jnp.bfloat16):
+    d_inner = spec.expand * d_model
+    h = d_inner // spec.head_dim
+    g, n = spec.n_groups, spec.d_state
+    bc_dim = 2 * g * n
+    ks = jax.random.split(key, 6)
+    scale = d_model ** -0.5
+    return {
+        "ln": jnp.ones((d_model,), dtype),
+        "w_z": (jax.random.normal(ks[0], (d_model, d_inner)) * scale
+                ).astype(dtype),
+        "w_x": (jax.random.normal(ks[1], (d_model, d_inner)) * scale
+                ).astype(dtype),
+        "w_bc": (jax.random.normal(ks[2], (d_model, bc_dim)) * scale
+                 ).astype(dtype),
+        "w_dt": (jax.random.normal(ks[3], (d_model, h)) * scale
+                 ).astype(dtype),
+        "conv_x_w": (jax.random.normal(ks[4], (spec.d_conv, d_inner))
+                     * 0.1).astype(dtype),
+        "conv_x_b": jnp.zeros((d_inner,), dtype),
+        "conv_bc_w": (jax.random.normal(ks[5], (spec.d_conv, bc_dim))
+                      * 0.1).astype(dtype),
+        "conv_bc_b": jnp.zeros((bc_dim,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.linspace(0.001, 0.1, h))).astype(dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_ln": jnp.ones((d_inner,), dtype),
+        "w_out": (jax.random.normal(jax.random.fold_in(key, 7),
+                                    (d_inner, d_model)) * d_inner ** -0.5
+                  ).astype(dtype),
+    }
+
+
+def init_mamba2_cache(batch: int, d_model: int, spec, dtype=jnp.bfloat16
+                      ) -> Mamba2Cache:
+    d_inner = spec.expand * d_model
+    h = d_inner // spec.head_dim
+    bc_dim = 2 * spec.n_groups * spec.d_state
+    return Mamba2Cache(
+        conv_x=jnp.zeros((batch, spec.d_conv - 1, d_inner), dtype),
+        conv_bc=jnp.zeros((batch, spec.d_conv - 1, bc_dim), dtype),
+        ssm=jnp.zeros((batch, h, spec.head_dim, spec.d_state), jnp.float32),
+    )

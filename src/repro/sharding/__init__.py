@@ -1,0 +1,13 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Model code annotates tensors with *logical* axes ("dp", "tp", …);
+:func:`use_mesh` binds a physical mesh and the rules below translate the
+hints into ``with_sharding_constraint`` calls.  Without a bound mesh every
+hint is a no-op, so smoke tests run unchanged on one CPU device.
+"""
+
+from .api import (ACT_SEQ, LOGICAL_RULES, act_axes, constrain,
+                  current_mesh, logical_spec, named_sharding, use_mesh)
+
+__all__ = ["ACT_SEQ", "LOGICAL_RULES", "act_axes", "constrain",
+           "current_mesh", "logical_spec", "named_sharding", "use_mesh"]

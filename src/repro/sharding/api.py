@@ -1,0 +1,126 @@
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis → tuple of mesh axes (filtered by what the mesh provides)
+LOGICAL_RULES = {
+    "dp": ("pod", "data"),        # batch / data parallel
+    "sp": ("data",),              # sequence parallel (long-context)
+    "tp": ("model",),             # tensor parallel (heads / ffn / vocab)
+    "tp_act": ("model",),         # activation d_model sharding (Megatron SP)
+    "ep": ("model",),             # expert parallel
+    "zero": ("data",),            # optimizer-state sharding (ZeRO-1)
+    # KV-cache sequence axis: takes whatever of (data, model) the batch
+    # axis left unused — decode_32k shards seq over model; long_500k
+    # (batch 1) shards seq over data AND model.
+    "kvseq": ("data", "model"),
+    # Megatron-SP residual stream: sequence sharded over model between
+    # blocks (enabled by ACT_SEQ) — per-layer comm becomes
+    # all-gather(seq) + reduce-scatter(seq) instead of all-reduce.
+    "act_seq": ("model",),
+    None: (),
+}
+
+# Runtime switch (launch/dryrun §Perf): residual-stream layout.
+ACT_SEQ = [False]
+
+
+def act_axes():
+    """Logical axes for the residual stream between blocks."""
+    if ACT_SEQ[0]:
+        return ("dp", "act_seq", None)
+    return ("dp", None, "tp_act")
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    """Bind a mesh for logical-axis constraint resolution (and enter the
+    jax mesh context so collectives/shard_map resolve axis names)."""
+    prev = current_mesh()
+    _state.mesh = mesh
+    try:
+        if mesh is not None:
+            with mesh:
+                yield mesh
+        else:
+            yield None
+    finally:
+        _state.mesh = prev
+
+
+def _resolve(axis: Union[str, None], mesh: Mesh) -> Optional[Tuple[str, ...]]:
+    mesh_axes = set(mesh.axis_names)
+    phys = tuple(a for a in LOGICAL_RULES.get(axis, ()) if a in mesh_axes)
+    if not phys:
+        return None
+    return phys
+
+
+def logical_spec(axes: Sequence[Union[str, None]],
+                 mesh: Optional[Mesh] = None,
+                 shape: Optional[Sequence[int]] = None) -> P:
+    """Translate logical axes to a PartitionSpec for ``mesh``.
+
+    With ``shape`` given, axes whose mesh extent does not divide the dim
+    size are dropped (replicated) — e.g. batch=1 decode cells drop "dp".
+    """
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return P()
+    parts = []
+    used: set = set()
+    for i, ax in enumerate(axes):
+        phys = _resolve(ax, mesh)
+        if phys is None:
+            parts.append(None)
+            continue
+        phys = tuple(p for p in phys if p not in used)
+        if shape is not None and phys:
+            # keep the largest prefix of mesh axes that divides the dim
+            keep = []
+            extent = 1
+            for p in phys:
+                if shape[i] % (extent * mesh.shape[p]) == 0:
+                    keep.append(p)
+                    extent *= mesh.shape[p]
+                else:
+                    break
+            phys = tuple(keep)
+        used.update(phys)
+        if not phys:
+            parts.append(None)
+        else:
+            parts.append(phys if len(phys) != 1 else phys[0])
+    return P(*parts)
+
+
+def named_sharding(axes: Sequence[Union[str, None]],
+                   mesh: Optional[Mesh] = None,
+                   shape: Optional[Sequence[int]] = None
+                   ) -> Optional[NamedSharding]:
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_spec(axes, mesh, shape))
+
+
+def constrain(x: jax.Array, axes: Sequence[Union[str, None]]) -> jax.Array:
+    """Apply a logical sharding constraint if a mesh is bound (no-op
+    otherwise, so single-device tests run unannotated)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_spec(axes, mesh, shape=x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))

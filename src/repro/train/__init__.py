@@ -1,0 +1,16 @@
+from .compression import (compressed_psum_mean, init_error_feedback)
+from .loop import (StepTimer, StepWatchdog, TrainState, init_train_state,
+                   make_train_step)
+from .optimizer import (AdamWConfig, OptState, adamw_update, global_norm,
+                        init_opt_state, lr_schedule)
+from .sharding_rules import (batch_logical_axes, opt_logical_axes,
+                             param_logical_axes)
+
+__all__ = [
+    "compressed_psum_mean", "init_error_feedback",
+    "StepTimer", "StepWatchdog", "TrainState", "init_train_state",
+    "make_train_step",
+    "AdamWConfig", "OptState", "adamw_update", "global_norm",
+    "init_opt_state", "lr_schedule",
+    "batch_logical_axes", "opt_logical_axes", "param_logical_axes",
+]

@@ -1,0 +1,55 @@
+"""int8 gradient compression with error feedback for cross-pod sync.
+
+Distributed-optimization trick for the DCN-connected ``pod`` axis: the
+inter-pod gradient all-reduce is the slowest collective in the multi-pod
+mesh (~25 GB/s DCN vs ~50 GB/s/link ICI), so we quantize the payload to
+int8 with a shared per-tensor scale and carry the quantization error into
+the next step (error feedback keeps convergence unbiased in expectation).
+
+Wire protocol per tensor:
+  1. ``scale = psum_max(|g+e|) / 127``      (scalar, fp32)
+  2. ``q = round((g+e)/scale)``             (int8 payload)
+  3. ``sum = psum(q.int32)``                (int32 on the wire; a real DCN
+     transport would reduce-scatter int8 + all-gather int8 — we keep the
+     jax-native psum and count payload bytes as 4·n in the roofline, still
+     2× less than fp32 all-reduce + no fp32 master copy exchange)
+  4. ``g' = sum · scale / n_pods``; ``e' = (g+e) - dequant(own share)``
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _compress_one(g: jnp.ndarray, e: jnp.ndarray, axis: str
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    gf = g.astype(jnp.float32) + e
+    amax = jax.lax.pmax(jnp.max(jnp.abs(gf)), axis)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127)
+    local_dq = q * scale
+    new_e = gf - local_dq
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+    summed = jax.lax.psum(q.astype(jnp.int32), axis).astype(jnp.float32)
+    mean = (summed * scale / n).astype(g.dtype)
+    return mean, new_e
+
+
+def compressed_psum_mean(grads: Any, err: Any, axis: str
+                         ) -> Tuple[Any, Any]:
+    """Mean-reduce a gradient pytree across ``axis`` with int8 quantization
+    and error feedback.  Must run inside shard_map over ``axis``."""
+    out = jax.tree.map(partial(_compress_one, axis=axis), grads, err)
+    mean = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return mean, new_err
+
+
+def init_error_feedback(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

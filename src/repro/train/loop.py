@@ -1,0 +1,125 @@
+"""Training loop: train-step factory (grad accumulation, bf16 + fp32
+moments, remat), step watchdog for straggler mitigation."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models import forward, lm_loss
+
+from .optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+def init_train_state(params) -> TrainState:
+    return TrainState(params=params, opt=init_opt_state(params))
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
+                    microbatches: int = 1) -> Callable:
+    """Returns train_step(state, tokens) -> (state, metrics).
+
+    ``microbatches`` > 1 splits the per-step batch and accumulates grads
+    with a lax.scan (sequential microbatching — the standard way to fit
+    the global batch when activations dominate memory)."""
+
+    def loss_fn(params, tokens):
+        logits = forward(params, tokens, cfg)
+        return lm_loss(logits, tokens)
+
+    def train_step(state: TrainState, tokens: jnp.ndarray):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, tokens)
+        else:
+            b = tokens.shape[0]
+            mb = tokens.reshape(microbatches, b // microbatches,
+                                tokens.shape[1])
+
+            def acc(carry, batch):
+                loss_i, g_i = jax.value_and_grad(loss_fn)(state.params,
+                                                          batch)
+                return jax.tree.map(jnp.add, carry[0], g_i), \
+                    carry[1] + loss_i
+
+            # scan keeps one gradient buffer live instead of `microbatches`
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+
+            def body(carry, batch):
+                return acc(carry, batch), None
+
+            (gsum, lsum), _ = jax.lax.scan(body, (zeros, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+
+        new_params, new_opt, om = adamw_update(opt_cfg, state.params,
+                                               grads, state.opt)
+        metrics = {"loss": loss, **om}
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Straggler mitigation: per-step timing watchdog
+# ---------------------------------------------------------------------------
+@dataclass
+class StepWatchdog:
+    """Tracks step wall-times and flags stragglers.
+
+    On a real multi-pod deployment each host reports its step time into
+    the coordination service; a host exceeding ``threshold ×`` the rolling
+    median marks itself a straggler, and the documented policy is:
+    (1) log + alert, (2) after ``evict_after`` consecutive flags the
+    launcher removes the pod from the mesh and restarts from the latest
+    checkpoint with a shrunk data axis (elastic restore,
+    checkpoint.manager).  On this single-host build the watchdog is fully
+    functional for detection; eviction is exercised in tests via the
+    callback hook.
+    """
+
+    threshold: float = 3.0
+    window: int = 32
+    evict_after: int = 3
+    on_straggler: Optional[Callable[[int, float], None]] = None
+    _times: List[float] = field(default_factory=list)
+    _consecutive: int = 0
+    flagged_steps: List[int] = field(default_factory=list)
+
+    def record(self, step: int, duration_s: float) -> bool:
+        self._times.append(duration_s)
+        if len(self._times) > self.window:
+            self._times.pop(0)
+        med = sorted(self._times)[len(self._times) // 2]
+        is_straggler = (len(self._times) >= 5
+                        and duration_s > self.threshold * med)
+        if is_straggler:
+            self._consecutive += 1
+            self.flagged_steps.append(step)
+            if self.on_straggler and self._consecutive >= self.evict_after:
+                self.on_straggler(step, duration_s)
+        else:
+            self._consecutive = 0
+        return is_straggler
+
+
+class StepTimer:
+    def __init__(self):
+        self.t0 = None
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.elapsed = time.perf_counter() - self.t0

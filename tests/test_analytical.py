@@ -1,0 +1,123 @@
+"""Tests for the analytical model (paper §V) and its validation metrics."""
+
+import numpy as np
+import pytest
+
+from repro.core import (SimConfig, build_fa2_trace, fa2_counts, fit_params,
+                        kendall_tau, kept_fraction, named_policy, predict,
+                        r_squared, run_policy)
+from repro.core.analytical import ModelParams
+from repro.core.workloads import SPATIAL, TEMPORAL, AttnWorkload
+
+WL = AttnWorkload("tiny-t", n_q_heads=8, n_kv_heads=4, head_dim=128,
+                  seq_len=1024, group_alloc=TEMPORAL)
+
+
+def test_kept_fraction_lru_step_function():
+    # LRU: all-or-nothing (paper §V-C)
+    assert kept_fraction("lru", s_work=1000, s_llc=8000, assoc=8) == 1.0
+    assert kept_fraction("lru", s_work=9000, s_llc=8000, assoc=8) == 0.0
+
+
+def test_kept_fraction_at_skept_formula():
+    # S_kept = S_work * M / 2^B <= S_LLC * (A-1)/A
+    f = kept_fraction("at+dbp", s_work=8 * 2**20, s_llc=4 * 2**20, assoc=8,
+                      b_bits=3)
+    # S_eff = 3.5MB; tier = 1MB → M = 3 → f = 3/8
+    assert f == pytest.approx(3 / 8)
+
+
+def test_kept_fraction_optimal_bypass_uses_whole_cache():
+    f_b = kept_fraction("bypass+dbp", s_work=8 * 2**20, s_llc=4 * 2**20,
+                        assoc=8)
+    f_at = kept_fraction("at+dbp", s_work=8 * 2**20, s_llc=4 * 2**20,
+                         assoc=8)
+    assert f_b > f_at                      # paper §VI-E3
+    assert f_b == pytest.approx(0.5)
+
+
+def test_kept_fraction_gqa_bypass_conservative():
+    # under inter-core sharing the gqa variant pins nothing extra
+    f = kept_fraction("bypass+dbp", s_work=8 * 2**20, s_llc=4 * 2**20,
+                      assoc=8, gqa=True)
+    assert f == 0.0
+    f_all = kept_fraction("all", s_work=8 * 2**20, s_llc=4 * 2**20,
+                          assoc=8, gqa=True)
+    assert f_all == pytest.approx(3 / 8)   # falls back to at
+
+
+def test_predict_kept_fraction_monotone_in_cache_size():
+    """Bigger cache → larger kept fraction; thrashing end slower than the
+    fits end.  (Total time is NOT strictly monotone by construction:
+    Eq. 2 serializes t_hit while conflict misses overlap with compute.)"""
+    counts = fa2_counts(WL, n_cores=4)
+    hw = SimConfig(n_cores=4)
+    preds = [predict(counts, s * 2**20, "at+dbp", hw)
+             for s in (1, 2, 4, 16)]
+    fracs = [p.kept_fraction for p in preds]
+    assert all(a <= b for a, b in zip(fracs, fracs[1:]))
+    assert fracs[-1] == 1.0
+
+
+def test_predict_policy_ordering_under_thrash():
+    # 16-core configuration (paper Table IV) → memory-bound regime, where
+    # the policy ordering lru ≥ at ≥ optimal-bypass must hold
+    counts = fa2_counts(WL, n_cores=16)
+    hw = SimConfig(n_cores=16)
+    llc = 512 * 1024
+    lru = predict(counts, llc, "lru", hw).cycles
+    at = predict(counts, llc, "at+dbp", hw).cycles
+    opt = predict(counts, llc, "all", hw).cycles
+    assert lru >= at >= opt
+
+
+def test_metrics_perfect_and_degraded():
+    x = np.array([1.0, 2.0, 3.0, 4.0])
+    assert r_squared(x, x) == pytest.approx(1.0)
+    assert kendall_tau(x, x) == pytest.approx(1.0)
+    assert kendall_tau(-x, x) == pytest.approx(-1.0)
+    assert abs(kendall_tau(np.array([1.0, 3.0, 2.0, 4.0]), x)) < 1.0
+
+
+def test_model_validates_against_simulator():
+    """Mini Fig-9: fit θ on a few sim points, check rank preservation."""
+    hw = SimConfig(n_cores=4, llc_slices=8)
+    pts = []
+    for wl in (WL, AttnWorkload("tiny-s", 16, 4, 128, 1024,
+                                group_alloc=SPATIAL)):
+        tr = build_fa2_trace(wl, n_cores=4)
+        counts = fa2_counts(wl, n_cores=4)
+        gqa = wl.group_alloc == SPATIAL
+        for llc in (512 * 1024, 1 * 2**20, 2 * 2**20):
+            cfg = SimConfig(n_cores=4, llc_bytes=llc, llc_slices=8)
+            for pol, sim_pol in (("lru", "lru"), ("at+dbp", "at"),
+                                 ("all", "all")):
+                res = run_policy(tr, named_policy(sim_pol, gqa=gqa), cfg,
+                                 record_history=False)
+                pts.append((counts, llc, pol, "optimal", gqa,
+                            counts.n_rounds, res.cycles))
+    params = fit_params(pts, hw)
+    pred = np.array([predict(c, l, p, hw, params, v, g, n_rounds=r).cycles
+                     for (c, l, p, v, g, r, _) in pts])
+    target = np.array([t for *_, t in pts])
+    r2 = r_squared(pred, target)
+    tau = kendall_tau(pred, target)
+    assert r2 > 0.80, f"R²={r2}"
+    assert tau > 0.65, f"tau={tau}"
+
+
+def test_fit_params_improves_loss():
+    hw = SimConfig(n_cores=4, llc_slices=8)
+    tr = build_fa2_trace(WL, n_cores=4)
+    counts = fa2_counts(WL, n_cores=4)
+    cfg = SimConfig(n_cores=4, llc_bytes=1 * 2**20, llc_slices=8)
+    res = run_policy(tr, named_policy("lru"), cfg, record_history=False)
+    pts = [(counts, 1 * 2**20, "lru", "optimal", False, counts.n_rounds,
+            res.cycles)]
+    fitted = fit_params(pts, hw)
+    default_err = abs(predict(counts, 1 * 2**20, "lru", hw,
+                              ModelParams(),
+                              n_rounds=counts.n_rounds).cycles - res.cycles)
+    fitted_err = abs(predict(counts, 1 * 2**20, "lru", hw, fitted,
+                             n_rounds=counts.n_rounds).cycles - res.cycles)
+    assert fitted_err <= default_err + 1e-6

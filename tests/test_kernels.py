@@ -1,0 +1,170 @@
+"""Per-kernel allclose tests vs the pure-jnp oracles (interpret mode on
+CPU), sweeping shapes and dtypes as required."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.orchestrator import CacheOrchestrator
+from repro.kernels import (attention_ref, decode_attention,
+                           decode_attention_ref, flash_attention, ssd_ref,
+                           ssd_scan, ssd_sequential_ref)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+FLASH_CASES = [
+    # (B, Sq, Sk, H, G, D, causal, softcap, pinned, dtype)
+    (1, 256, 256, 4, 4, 128, True, None, 0, jnp.float32),
+    (2, 256, 256, 8, 2, 128, True, None, 0, jnp.bfloat16),
+    (1, 128, 512, 4, 1, 128, False, None, 0, jnp.float32),
+    (1, 256, 256, 4, 2, 128, True, 50.0, 0, jnp.float32),
+    (2, 256, 256, 4, 2, 64, True, None, 128, jnp.float32),   # pinned prefix
+    (1, 384, 384, 2, 2, 128, True, None, 256, jnp.bfloat16),  # mostly pinned
+    (1, 256, 256, 4, 4, 128, True, None, 256, jnp.float32),  # fully pinned
+]
+
+
+@pytest.mark.parametrize(
+    "b,sq,sk,h,g,d,causal,softcap,pinned,dtype", FLASH_CASES)
+def test_flash_attention_matches_ref(b, sq, sk, h, g, d, causal, softcap,
+                                     pinned, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = rand(ks[0], (b, sq, h, d), dtype)
+    k = rand(ks[1], (b, sk, g, d), dtype)
+    v = rand(ks[2], (b, sk, g, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, softcap=softcap,
+                          pinned_rows=pinned, block_q=128, block_k=128,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, softcap=softcap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(out.astype(np.float32),
+                               ref.astype(np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_attention_orchestrator_split_is_valid():
+    """The CacheOrchestrator's S_kept split must be block-aligned and fit
+    the budget, and the kernel must accept it."""
+    orch = CacheOrchestrator(vmem_budget_bytes=256 * 1024, b_bits=3)
+    seq = 1024
+    bytes_per_row = 2 * 128 * 2          # K+V rows, bf16, d=128
+    pinned, streamed = orch.plan_kv_split(seq, 128, bytes_per_row)
+    assert pinned + streamed == seq
+    assert pinned % 128 == 0
+    assert pinned * bytes_per_row <= 256 * 1024
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = rand(ks[0], (1, seq, 2, 128), jnp.bfloat16)
+    k = rand(ks[1], (1, seq, 2, 128), jnp.bfloat16)
+    v = rand(ks[2], (1, seq, 2, 128), jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=True, pinned_rows=pinned,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out.astype(np.float32),
+                               ref.astype(np.float32), rtol=2e-2, atol=2e-2)
+
+
+def test_flash_attention_pinned_equivalence():
+    """Pinned split is a pure execution-schedule change: results must be
+    bit-consistent across split points (same fp32 accumulation order up to
+    reassociation tolerance)."""
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = rand(ks[0], (1, 256, 2, 128), jnp.float32)
+    k = rand(ks[1], (1, 256, 2, 128), jnp.float32)
+    v = rand(ks[2], (1, 256, 2, 128), jnp.float32)
+    outs = [flash_attention(q, k, v, causal=True, pinned_rows=p,
+                            interpret=True) for p in (0, 128, 256)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+DECODE_CASES = [
+    # (B, S, H, G, D, dtype)
+    (1, 512, 4, 4, 128, jnp.float32),
+    (2, 1024, 8, 2, 128, jnp.bfloat16),
+    (2, 512, 4, 1, 64, jnp.float32),
+    (1, 2048, 16, 4, 128, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("b,s,h,g,d,dtype", DECODE_CASES)
+def test_decode_attention_matches_ref(b, s, h, g, d, dtype):
+    ks = jax.random.split(jax.random.key(3), 4)
+    q = rand(ks[0], (b, h, d), dtype)
+    k = rand(ks[1], (b, s, g, d), dtype)
+    v = rand(ks[2], (b, s, g, d), dtype)
+    lens = jax.random.randint(ks[3], (b,), 1, s + 1)
+    out = decode_attention(q, k, v, lens, block_k=256, interpret=True)
+    ref = decode_attention_ref(q, k, v, lens)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(out.astype(np.float32),
+                               ref.astype(np.float32), rtol=tol, atol=tol)
+
+
+def test_decode_attention_dead_blocks_never_counted():
+    """Slots past cache_len must not affect the result (retired data)."""
+    ks = jax.random.split(jax.random.key(4), 3)
+    q = rand(ks[0], (1, 4, 64), jnp.float32)
+    k = rand(ks[1], (1, 512, 2, 64), jnp.float32)
+    v = rand(ks[2], (1, 512, 2, 64), jnp.float32)
+    lens = jnp.array([300], jnp.int32)
+    out1 = decode_attention(q, k, v, lens, interpret=True, block_k=256)
+    # poison the dead region
+    k2 = k.at[:, 300:].set(1e4)
+    v2 = v.at[:, 300:].set(-1e4)
+    out2 = decode_attention(q, k2, v2, lens, interpret=True, block_k=256)
+    np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan
+# ---------------------------------------------------------------------------
+SSD_CASES = [
+    # (B, S, H, G, P, N, chunk, dtype)
+    (1, 128, 2, 1, 64, 32, 32, jnp.float32),
+    (2, 256, 4, 1, 32, 64, 64, jnp.float32),
+    (1, 256, 4, 2, 64, 32, 64, jnp.bfloat16),
+    (1, 512, 2, 1, 64, 128, 128, jnp.float32),
+]
+
+
+def _ssd_inputs(key, b, s, h, g, p, n, dtype):
+    ks = jax.random.split(key, 4)
+    x = rand(ks[0], (b, s, h, p), dtype)
+    dt = jax.nn.softplus(rand(ks[1], (b, s, h), jnp.float32)) * 0.1
+    A = -jnp.exp(jax.random.uniform(ks[2], (h,), minval=-1.0, maxval=1.0))
+    B = rand(ks[3], (b, s, g, n), dtype)
+    C = rand(jax.random.key(99), (b, s, g, n), dtype)
+    return x, dt, A, B, C
+
+
+@pytest.mark.parametrize("b,s,h,g,p,n,chunk,dtype", SSD_CASES)
+def test_ssd_kernel_matches_chunked_ref(b, s, h, g, p, n, chunk, dtype):
+    x, dt, A, B, C = _ssd_inputs(jax.random.key(5), b, s, h, g, p, n, dtype)
+    y, state = ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=True)
+    y_ref, state_ref = ssd_ref(x, dt, A, B, C, chunk)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(y.astype(np.float32),
+                               y_ref.astype(np.float32), rtol=tol, atol=tol)
+    np.testing.assert_allclose(state, state_ref, rtol=tol, atol=tol)
+
+
+def test_ssd_chunked_matches_sequential():
+    """The chunked SSD algorithm (model path) vs O(S) recurrence."""
+    x, dt, A, B, C = _ssd_inputs(jax.random.key(6), 2, 128, 2, 1, 32, 16,
+                                 jnp.float32)
+    y_c, st_c = ssd_ref(x, dt, A, B, C, chunk=32)
+    y_s, st_s = ssd_sequential_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(y_c, y_s, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(st_c, st_s.transpose(0, 1, 2, 3), rtol=1e-4,
+                               atol=1e-4)

@@ -1,0 +1,94 @@
+"""Per-architecture smoke tests: reduced config, one forward + decode step
+on CPU, asserting output shapes and finiteness (no NaNs)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_arch, reduce_for_smoke
+from repro.models import (decode_step, forward, init_cache, init_params,
+                          lm_loss, prefill)
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    return tokens
+
+
+@pytest.fixture(scope="module", params=ARCH_NAMES)
+def arch(request):
+    cfg = reduce_for_smoke(get_arch(request.param))
+    params = init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def test_forward_shapes_and_finite(arch):
+    cfg, params = arch
+    tokens = _batch(cfg, jax.random.key(1))
+    logits = jax.jit(lambda p, t: forward(p, t, cfg))(params, tokens)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+def test_loss_finite_and_positive(arch):
+    cfg, params = arch
+    tokens = _batch(cfg, jax.random.key(2))
+    loss = jax.jit(lambda p, t: lm_loss(forward(p, t, cfg), t))(
+        params, tokens)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+
+
+def test_train_grad_step_no_nans(arch):
+    cfg, params = arch
+    tokens = _batch(cfg, jax.random.key(3))
+
+    def loss_fn(p):
+        return lm_loss(forward(p, tokens, cfg), tokens)
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert np.isfinite(float(loss))
+    leaves = jax.tree.leaves(grads)
+    assert leaves
+    for g in leaves:
+        assert bool(jnp.isfinite(g.astype(jnp.float32)).all())
+
+
+def test_prefill_then_decode_matches_forward(arch):
+    """Decode with a prefilled cache must reproduce full-forward logits."""
+    cfg, params = arch
+    tokens = _batch(cfg, jax.random.key(4))
+    full = jax.jit(lambda p, t: forward(p, t, cfg, remat=False))(
+        params, tokens)
+
+    logits_p, cache = jax.jit(
+        lambda p, t: prefill(p, t[:, :-1], cfg))(params, tokens)
+    # grow attention cache to S (prefill sized it to S-1)
+    if cache.k is not None:
+        pad = [(0, 0), (0, 0), (0, 1), (0, 0), (0, 0)]
+        cache = cache._replace(k=jnp.pad(cache.k, pad),
+                               v=jnp.pad(cache.v, pad))
+    logits_d, cache2 = jax.jit(
+        lambda p, t, c: decode_step(p, t, c, cfg))(
+        params, tokens[:, -1:], cache)
+
+    a = logits_p.astype(np.float32)               # pos S-2 from prefill
+    b = full[:, -2].astype(np.float32)
+    np.testing.assert_allclose(a, b, rtol=3e-2, atol=3e-2)
+    c = logits_d[:, 0].astype(np.float32)         # pos S-1 from decode
+    d = full[:, -1].astype(np.float32)
+    np.testing.assert_allclose(c, d, rtol=3e-2, atol=3e-2)
+    assert int(cache2.pos) == S
+
+
+def test_decode_cache_shapes(arch):
+    cfg, params = arch
+    cache = init_cache(cfg, B, S)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, new = jax.jit(lambda p, t, c: decode_step(p, t, c, cfg))(
+        params, tok, cache)
+    assert logits.shape == (B, 1, cfg.vocab)
+    jax.tree.map(lambda a, b: None if a is None else
+                 np.testing.assert_equal(a.shape, b.shape), cache, new)

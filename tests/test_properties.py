@@ -1,0 +1,149 @@
+"""Hypothesis property tests on system invariants (beyond the per-module
+properties in test_cache_policies)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import kept_fraction, predict
+from repro.core.orchestrator import CacheOrchestrator
+from repro.core.tmu import TMU, TMUParams, TensorMeta
+from repro.core.traces import fa2_counts
+from repro.core.workloads import SPATIAL, TEMPORAL, AttnWorkload
+from repro.launch.roofline import _shape_bytes, _wire_factor, param_count
+
+
+# ---------------------------------------------------------------------------
+# Orchestrator invariants
+# ---------------------------------------------------------------------------
+@settings(max_examples=60, deadline=None)
+@given(budget_kb=st.integers(16, 8192),
+       seq=st.sampled_from([256, 512, 1024, 4096]),
+       head_dim=st.sampled_from([64, 128, 256]))
+def test_plan_kv_split_invariants(budget_kb, seq, head_dim):
+    """The S_kept split always: partitions the sequence, stays
+    block-aligned, fits the usable budget, and grows with the budget."""
+    orch = CacheOrchestrator(vmem_budget_bytes=budget_kb * 1024)
+    bpr = 2 * head_dim * 2
+    pinned, streamed = orch.plan_kv_split(seq, 128, bpr)
+    assert pinned + streamed == seq
+    assert pinned % 128 == 0 and pinned >= 0 and streamed >= 0
+    if streamed:        # not everything fits → pinned obeys the budget
+        assert pinned * bpr <= budget_kb * 1024
+    bigger = CacheOrchestrator(vmem_budget_bytes=2 * budget_kb * 1024)
+    p2, _ = bigger.plan_kv_split(seq, 128, bpr)
+    assert p2 >= pinned
+
+
+@settings(max_examples=40, deadline=None)
+@given(n_tensors=st.integers(1, 6),
+       tiles=st.integers(1, 32),
+       budget_tiles=st.integers(1, 64))
+def test_orchestrator_plan_budget_and_partition(n_tensors, tiles,
+                                                budget_tiles):
+    tile_bytes = 16 * 1024
+    orch = CacheOrchestrator(vmem_budget_bytes=budget_tiles * tile_bytes,
+                             reserve_fraction=0.125)
+    for t in range(n_tensors):
+        orch.register(TensorMeta(t, base_addr=t * tiles * tile_bytes,
+                                 size_bytes=tiles * tile_bytes,
+                                 tile_bytes=tile_bytes, n_acc=4))
+    plan = orch.plan()
+    usable = int(orch.vmem_budget * (1 - orch.reserve_fraction))
+    assert plan.pinned_bytes <= usable
+    for e in plan.entries.values():
+        got = sorted(e.pinned_tiles + e.streamed_tiles)
+        assert got == list(range(tiles))       # exact partition
+
+
+# ---------------------------------------------------------------------------
+# Analytical model invariants
+# ---------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(s_work=st.integers(1, 64), s_llc=st.integers(1, 64),
+       b_bits=st.integers(1, 4))
+def test_kept_fraction_bounds_and_policy_dominance(s_work, s_llc, b_bits):
+    MB = 2 ** 20
+    args = dict(s_work=s_work * MB, s_llc=s_llc * MB, assoc=8,
+                b_bits=b_bits)
+    for pol in ("lru", "dbp", "at+dbp", "bypass+dbp", "all"):
+        f = kept_fraction(pol, **args)
+        assert 0.0 <= f <= 1.0
+    # optimal bypass dominates anti-thrashing (whole cache vs (A-1)/A)
+    assert kept_fraction("all", **args) >= kept_fraction("at+dbp", **args)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seq=st.sampled_from([1024, 2048, 4096]),
+       kv=st.sampled_from([4, 8, 16]),
+       alloc=st.sampled_from([TEMPORAL, SPATIAL]))
+def test_prediction_positive_and_counts_consistent(seq, kv, alloc):
+    wl = AttnWorkload("prop", n_q_heads=32, n_kv_heads=kv, head_dim=128,
+                      seq_len=seq, group_alloc=alloc)
+    counts = fa2_counts(wl)
+    assert counts.n_kv_accesses >= counts.n_kv_distinct
+    assert counts.n_temporal_reuse >= 0
+    assert counts.n_intercore_reuse >= 0
+    pred = predict(counts, 4 * 2 ** 20, "all", gqa=(alloc == SPATIAL),
+                   n_rounds=counts.n_rounds)
+    assert pred.cycles > 0
+    assert pred.n_hit + pred.n_cold + pred.n_cf > 0
+
+
+# ---------------------------------------------------------------------------
+# TMU invariant: retirement count never exceeds TLL accesses / nAcc
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(n_acc=st.integers(1, 5), accesses=st.integers(0, 40))
+def test_tmu_retirement_rate(n_acc, accesses):
+    tmu = TMU(params=TMUParams(b_bits=3))
+    meta = TensorMeta(0, 0, 8 * 1024, 1024, n_acc=n_acc)
+    tmu.register(meta)
+    for i in range(accesses):
+        tile = i % meta.num_tiles
+        tmu.on_access(meta.tile_last_line(tile, 128), tile)
+    assert tmu.stats["tiles_retired"] <= max(accesses // n_acc,
+                                             meta.num_tiles)
+    assert tmu.stats["tll_accesses"] == accesses
+
+
+# ---------------------------------------------------------------------------
+# Roofline helpers
+# ---------------------------------------------------------------------------
+def test_shape_bytes_parses_tuples():
+    assert _shape_bytes("f32[2,3]") == 24
+    assert _shape_bytes("(bf16[4,4], s32[2])") == 32 + 8
+    assert _shape_bytes("token[]") == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(gs=st.integers(2, 64))
+def test_wire_factors_ordering(gs):
+    """all-reduce must cost exactly 2× reduce-scatter; all-gather of a
+    shard equals reduce-scatter of the full tensor."""
+    ar = _wire_factor("all-reduce", gs)
+    rs = _wire_factor("reduce-scatter", gs)
+    ag = _wire_factor("all-gather", gs)
+    assert ar == pytest.approx(2 * rs)
+    # AG factor applies to the shard (1/gs of full): shard*(gs-1) ==
+    # full*(gs-1)/gs
+    assert ag / gs == pytest.approx(rs * (gs / (gs - 1)) * (gs - 1) / gs)
+
+
+def test_param_counts_in_published_ballpark():
+    """Config-derived parameter counts should land near the published
+    model sizes (loose ±40% band — embeddings/frontends differ)."""
+    from repro.configs import get_arch
+    expected = {
+        "llama3.2-3b": 3.2e9, "mistral-nemo-12b": 12e9,
+        "gemma2-27b": 27e9, "gemma-7b": 8.5e9,
+        "deepseek-moe-16b": 16e9,
+        # moonshot-v1-16b-a3b omitted: the assigned pool config
+        # (48L × 64 experts × d_ff 1408) computes to ~28B — we implement
+        # the assignment as specified, not the hf card.
+        "mamba2-2.7b": 2.7e9, "zamba2-7b": 7e9,
+    }
+    for name, n in expected.items():
+        got = param_count(get_arch(name))
+        assert 0.6 * n < got < 1.5 * n, f"{name}: {got / 1e9:.2f}B vs {n}"

@@ -1,0 +1,84 @@
+"""End-to-end behaviour tests for the DCO system: the paper's policy
+pipeline, its analytical projection, and the TPU-side orchestration must
+agree with each other."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CacheOrchestrator, SimConfig, build_fa2_trace,
+                        fa2_counts, named_policy, predict, run_policy)
+from repro.core.workloads import TEMPORAL, AttnWorkload
+from repro.kernels import attention_ref, flash_attention
+
+
+WL = AttnWorkload("sys-t", n_q_heads=8, n_kv_heads=8, head_dim=128,
+                  seq_len=1024, group_alloc=TEMPORAL)
+CFG = SimConfig(llc_bytes=1 * 2**20, llc_slices=8)
+
+
+def test_end_to_end_policy_ordering_matches_model():
+    """Simulator and analytical model must agree on the policy ranking
+    for a thrashing workload (the paper's central claim chain)."""
+    trace = build_fa2_trace(WL)
+    counts = fa2_counts(WL)
+    sim = {}
+    for pol in ("lru", "at", "all"):
+        sim[pol] = run_policy(trace, named_policy(pol), CFG,
+                              record_history=False).cycles
+    assert sim["lru"] > sim["at"] > sim["all"] * 0.999
+
+    model = {p: predict(counts, CFG.llc_bytes, m,
+                        n_rounds=counts.n_rounds).cycles
+             for p, m in (("lru", "lru"), ("at", "at+dbp"), ("all", "all"))}
+    assert model["lru"] >= model["at"] >= model["all"]
+
+
+def test_end_to_end_orchestrated_kernel_consistency():
+    """The orchestrator's S_kept plan must (a) respect the VMEM budget,
+    (b) shrink with the budget (self-adaptive), and (c) produce a kernel
+    split that matches the unorchestrated oracle numerically."""
+    seq, d, g = 512, 128, 2
+    bytes_per_row = 2 * d * 2
+    pins = []
+    for budget in (64 * 1024, 128 * 1024, 4 * 2**20):
+        orch = CacheOrchestrator(vmem_budget_bytes=budget)
+        pinned, streamed = orch.plan_kv_split(seq, 128, bytes_per_row)
+        assert pinned + streamed == seq and pinned % 128 == 0
+        if pinned * bytes_per_row:
+            assert pinned * bytes_per_row <= budget
+        pins.append(pinned)
+    assert pins[0] <= pins[1] <= pins[2] == seq   # monotone in budget
+
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (1, seq, 4, d), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, seq, g, d), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, seq, g, d), jnp.bfloat16)
+    ref = attention_ref(q, k, v, causal=True)
+    for pinned in sorted(set(pins)):
+        out = flash_attention(q, k, v, causal=True, pinned_rows=pinned,
+                              interpret=True)
+        np.testing.assert_allclose(out.astype(np.float32),
+                                   ref.astype(np.float32), rtol=2e-2,
+                                   atol=2e-2)
+
+
+def test_end_to_end_serving_retires_slots():
+    """Dead-block behaviour at the serving layer: a finished request's
+    slot is reused by the next queued request."""
+    from repro.configs import get_arch, reduce_for_smoke
+    from repro.models import init_params
+    from repro.serve import Request, ServeEngine
+
+    cfg = reduce_for_smoke(get_arch("llama3.2-3b"))
+    params = init_params(cfg, jax.random.key(0))
+    engine = ServeEngine(cfg, params, max_batch=1, max_seq=64)
+    rng = np.random.default_rng(1)
+    reqs = [Request(uid=i, prompt=rng.integers(
+        2, cfg.vocab, size=5).astype(np.int32), max_new_tokens=3)
+        for i in range(3)]
+    for r in reqs:
+        engine.add_request(r)
+    engine.run_to_completion()
+    assert all(r.done for r in reqs)          # 3 requests through 1 slot
+    assert engine._tmu.live_tiles == 0        # all slot lifetimes retired

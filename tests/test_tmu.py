@@ -1,0 +1,104 @@
+"""Unit tests for the TMU functional model (paper §IV-B, Table I/III)."""
+
+import numpy as np
+import pytest
+
+from repro.core.tmu import TMU, DeadFIFO, TMUParams, TensorMeta
+
+
+def test_dead_fifo_bounded_and_fifo_order():
+    f = DeadFIFO(depth=4)
+    for i in range(4):
+        assert f.push(i) is None
+    assert len(f) == 4
+    # full: pushing drops the oldest
+    dropped = f.push(99)
+    assert dropped == 0
+    assert 0 not in f and 99 in f and 1 in f
+
+
+def test_dead_fifo_duplicate_membership():
+    f = DeadFIFO(depth=3)
+    f.push(7)
+    f.push(7)
+    f.push(1)
+    assert 7 in f
+    assert f.push(2) is not None     # drops first 7
+    assert 7 in f                    # second copy still present
+    assert f.push(3) is not None     # drops second 7
+    assert 7 not in f
+
+
+def test_tensor_meta_validation():
+    with pytest.raises(ValueError):
+        TensorMeta(0, base_addr=0, size_bytes=1000, tile_bytes=300, n_acc=1)
+    m = TensorMeta(0, base_addr=4096, size_bytes=4096, tile_bytes=1024,
+                   n_acc=3)
+    assert m.num_tiles == 4
+    assert m.tile_of(4096 + 1500) == 1
+    assert m.tile_last_line(0, 128) == 4096 + 1024 - 128
+
+
+def test_tmu_register_capacity():
+    tmu = TMU(tensor_entries=2)
+    tmu.register(TensorMeta(0, 0, 1024, 1024, 1))
+    tmu.register(TensorMeta(1, 1024, 1024, 1024, 1))
+    with pytest.raises(RuntimeError):
+        tmu.register(TensorMeta(2, 2048, 1024, 1024, 1))
+    tmu.clear(0)
+    tmu.register(TensorMeta(2, 2048, 1024, 1024, 1))
+
+
+def test_tile_retires_after_nacc_tll_accesses():
+    """accCnt increments on tile-last-line access; at nAcc the tile's
+    tag[D_MSB:D_LSB] enters the dead FIFO."""
+    params = TMUParams(d_lsb=0, d_msb=11, b_bits=3)
+    tmu = TMU(line_bytes=128, params=params)
+    meta = TensorMeta(0, base_addr=0, size_bytes=2048, tile_bytes=1024,
+                      n_acc=2)
+    tmu.register(meta)
+    tll = meta.tile_last_line(0, 128)
+    tag = 0x123
+    # non-TLL access: no effect
+    tmu.on_access(0, tag)
+    assert tmu.acc_cnt(0, 0) == 0
+    tmu.on_access(tll, tag)
+    assert tmu.acc_cnt(0, 0) == 1
+    assert not tmu.is_dead(tag)
+    tmu.on_access(tll, tag)
+    assert tmu.acc_cnt(0, 0) == 0           # retired
+    assert tmu.is_dead(tag)
+    assert tmu.stats["tiles_retired"] == 1
+
+
+def test_bypass_all_tensor_not_tracked():
+    tmu = TMU()
+    meta = TensorMeta(0, 0, 1024, 1024, n_acc=1, bypass_all=True)
+    tmu.register(meta)
+    tmu.on_access(meta.tile_last_line(0, 128), 0x5)
+    assert tmu.stats["tll_accesses"] == 0
+
+
+def test_priority_and_dead_id_bit_slicing():
+    p = TMUParams(d_lsb=2, d_msb=5, b_bits=3)
+    tag = 0b110101100
+    assert p.priority(tag) == 0b100
+    assert p.dead_id(tag) == (tag >> 2) & 0xF
+
+
+def test_live_table_overflow_is_lossy_not_fatal():
+    tmu = TMU(tile_entries=2)
+    meta = TensorMeta(0, 0, 4096, 1024, n_acc=5)
+    tmu.register(meta)
+    for t in range(4):
+        tmu.on_access(meta.tile_last_line(t, 128), t)
+    assert tmu.live_tiles == 2
+    assert tmu.stats["live_overflow_evictions"] == 2
+
+
+def test_area_report_within_order_of_magnitude_of_paper():
+    tmu = TMU(tensor_entries=8, tile_entries=256, dead_fifo_depth=16)
+    rep = tmu.area_report()
+    # the paper's synthesized TMU is 64,438 µm²; a bit-count estimate of
+    # the Table-III configuration should land within ~10x
+    assert 3_000 < rep["estimated_um2"] < 650_000
