@@ -11,12 +11,27 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, Iterable, List
 
 REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports",
                           "benchmarks")
 
 MB = 2 ** 20
+
+
+def policy_sweep(trace, policies: Iterable[str], cfg,
+                 record_history: bool = False, gqa: bool = False) -> Dict:
+    """Run one trace under many policies via the batched
+    ``run_policies`` API (single compiled-trace build shared by every
+    policy — the figure scripts' standard path).  Returns
+    ``{policy_name: SimResult}`` keyed by the input names."""
+    from repro.core import named_policy, run_policies
+
+    names = list(policies)
+    results = run_policies(
+        trace, [named_policy(p, gqa=gqa) for p in names], cfg,
+        record_history=record_history)
+    return dict(zip(names, results))
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:

@@ -5,10 +5,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import SimConfig, build_fa2_trace, get_workload, \
-    named_policy, run_policy
+from repro.core import SimConfig, build_fa2_trace, get_workload
 
-from .common import Timer, emit, save
+from .common import Timer, emit, policy_sweep, save
 
 
 def run(full: bool = False) -> dict:
@@ -17,8 +16,9 @@ def run(full: bool = False) -> dict:
     cfg = SimConfig(llc_bytes=4 * 2 ** 20)
     curves = {}
     with Timer() as t:
-        for pol in ("lru", "at"):
-            res = run_policy(trace, named_policy(pol), cfg)
+        sweep = policy_sweep(trace, ("lru", "at"), cfg,
+                             record_history=True)
+        for pol, res in sweep.items():
             h = res.history
             # windowed hit rate over time (64 buckets)
             edges = np.linspace(0, h["cycles"][-1], 65)

@@ -6,10 +6,9 @@ Default grid runs the 2K rows; ``--full`` adds 4K.
 
 from __future__ import annotations
 
-from repro.core import SimConfig, build_fa2_trace, get_workload, \
-    named_policy, run_policy
+from repro.core import SimConfig, build_fa2_trace, get_workload
 
-from .common import MB, Timer, emit, save
+from .common import MB, Timer, emit, policy_sweep, save
 
 POLICIES = ("lru", "at", "lru+bypass", "at+bypass")
 
@@ -24,15 +23,14 @@ def run(full: bool = False) -> dict:
         for model, seq in cases:
             wl = get_workload(model, seq_len=seq)
             gqa = wl.group_alloc == "spatial"
+            # one trace (and one compiled lowering) for the whole
+            # capacity × policy grid of this case
             trace = build_fa2_trace(wl)
             for mb in sizes:
                 cfg = SimConfig(llc_bytes=mb * MB)
-                base = None
-                for pol in POLICIES:
-                    res = run_policy(trace, named_policy(pol, gqa=gqa),
-                                     cfg, record_history=False)
-                    if base is None:
-                        base = res.cycles
+                sweep = policy_sweep(trace, POLICIES, cfg, gqa=gqa)
+                base = sweep[POLICIES[0]].cycles
+                for pol, res in sweep.items():
                     table[f"{model}-{seq // 1024}K-{mb}MB-{pol}"] = {
                         "cycles": res.cycles,
                         "speedup_vs_lru": base / res.cycles,

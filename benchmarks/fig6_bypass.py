@@ -6,28 +6,24 @@ Paper: no static gear wins everywhere; dynamic tracks the best.
 
 from __future__ import annotations
 
-from repro.core import SimConfig, build_fa2_trace, get_workload, \
-    named_policy, run_policy
+from repro.core import SimConfig, build_fa2_trace, get_workload
 
-from .common import MB, Timer, emit, save
+from .common import MB, Timer, emit, policy_sweep, save
 
 
 def run(full: bool = False) -> dict:
     seq = 4096 if full else 2048
     wl = get_workload("gemma3-27b", seq_len=seq)
-    trace = build_fa2_trace(wl)
+    trace = build_fa2_trace(wl)       # compiled once for the whole grid
     sizes = (1, 2, 4, 8)
     policies = ("fix1", "fix2", "fix3", "at+bypass")
     table = {}
     with Timer() as t:
         for mb in sizes:
             cfg = SimConfig(llc_bytes=mb * MB)
-            ref = None
-            for pol in policies:
-                res = run_policy(trace, named_policy(pol), cfg,
-                                 record_history=False)
-                if ref is None:
-                    ref = res.cycles
+            sweep = policy_sweep(trace, policies, cfg)
+            ref = sweep[policies[0]].cycles
+            for pol, res in sweep.items():
                 table[f"{mb}MB-{pol}"] = {
                     "cycles": res.cycles,
                     "norm_vs_fix1": res.cycles / ref,

@@ -6,27 +6,23 @@ LRU best when everything fits (16MB)."""
 
 from __future__ import annotations
 
-from repro.core import SimConfig, build_fa2_trace, get_workload, \
-    named_policy, run_policy
+from repro.core import SimConfig, build_fa2_trace, get_workload
 
-from .common import MB, Timer, emit, save
+from .common import MB, Timer, emit, policy_sweep, save
 
 
 def run(full: bool = False) -> dict:
     seq = 4096 if full else 2048
     wl = get_workload("gemma3-27b", seq_len=seq, n_batches=2)
-    trace = build_fa2_trace(wl)
+    trace = build_fa2_trace(wl)       # compiled once for the whole grid
     sizes = (2, 4, 8, 16)
     table = {}
     with Timer() as t:
         for mb in sizes:
             cfg = SimConfig(llc_bytes=mb * MB)
-            base = run_policy(trace, named_policy("at+bypass"), cfg,
-                              record_history=False)
-            dbp = run_policy(trace, named_policy("all"), cfg,
-                             record_history=False)
-            lru = run_policy(trace, named_policy("lru"), cfg,
-                             record_history=False)
+            sweep = policy_sweep(trace, ("at+bypass", "all", "lru"), cfg)
+            base, dbp, lru = (sweep["at+bypass"], sweep["all"],
+                              sweep["lru"])
             table[f"{mb}MB"] = {
                 "at+bypass": base.cycles, "all": dbp.cycles,
                 "lru": lru.cycles,

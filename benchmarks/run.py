@@ -13,7 +13,7 @@ import traceback
 
 from . import (fig3_hitrate, fig4_policies, fig5_bbits, fig6_bypass,
                fig7_gear, fig8_dbp, fig9_validation, fig10_longctx,
-               roofline_bench, table2_tmu)
+               roofline_bench, sweep_perf, table2_tmu)
 
 BENCHMARKS = {
     "table2_tmu": table2_tmu.run,
@@ -26,6 +26,7 @@ BENCHMARKS = {
     "fig9_validation": fig9_validation.run,
     "fig10_longctx": fig10_longctx.run,
     "roofline": roofline_bench.run,
+    "sweep_perf": sweep_perf.run,
 }
 
 

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 verify wrapper (ROADMAP.md): fast default run with timing report.
+#
+#   scripts/tier1.sh            # default: skips @slow tests (pytest.ini)
+#   scripts/tier1.sh -m ""      # full run including @slow tests
+#
+# Extra arguments are forwarded to pytest.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q --durations=10 "$@"

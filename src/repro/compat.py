@@ -1,0 +1,54 @@
+"""Version-compatibility shims for the JAX APIs this repo relies on.
+
+The codebase targets the modern JAX surface (``jax.shard_map``,
+``jax.sharding.AbstractMesh(axis_sizes, axis_names)``, ``check_vma``),
+but must also run on JAX 0.4.x where
+
+* ``shard_map`` still lives in ``jax.experimental.shard_map`` and takes
+  ``check_rep`` instead of ``check_vma``;
+* ``AbstractMesh`` takes a single ``((name, size), ...)`` shape tuple.
+
+Import :func:`shard_map` / :func:`abstract_mesh` from here instead of
+touching ``jax`` directly so every call site is version-proof.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence, Tuple
+
+import jax
+
+__all__ = ["shard_map", "abstract_mesh"]
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    def shard_map(f, /, *, mesh, in_specs, out_specs, **kwargs):
+        """``jax.shard_map`` signature adapter over the experimental API.
+
+        Accepts the modern ``check_vma`` keyword and forwards it as the
+        pre-0.5 ``check_rep``; all other keywords pass through.
+        """
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _legacy_shard_map(f, mesh, in_specs, out_specs, **kwargs)
+
+
+def abstract_mesh(shape: Sequence[int], names: Sequence[str]) -> Any:
+    """Build ``jax.sharding.AbstractMesh`` across JAX versions.
+
+    Modern JAX: ``AbstractMesh(axis_sizes, axis_names)``.
+    JAX 0.4.x:  ``AbstractMesh(((name, size), ...))``.
+    """
+    AbstractMesh = jax.sharding.AbstractMesh
+    shape_t: Tuple[int, ...] = tuple(shape)
+    names_t: Tuple[str, ...] = tuple(names)
+    if len(shape_t) != len(names_t):
+        raise ValueError("shape and names must have the same length")
+    try:
+        return AbstractMesh(shape_t, names_t)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names_t, shape_t)))

@@ -6,10 +6,11 @@ from .analytical import (ModelParams, Prediction, fit_params, kendall_tau,
 from .cache import CacheGeometry, SharedLLC
 from .orchestrator import CacheOrchestrator, OrchestrationPlan
 from .policies import PolicyConfig, named_policy
-from .simulator import SimConfig, SimResult, Simulator, run_policy
+from .simulator import (SimConfig, SimResult, Simulator, run_policies,
+                        run_policy)
 from .tmu import TMU, DeadFIFO, TMUParams, TensorMeta
-from .traces import (DataflowCounts, Step, Trace, build_fa2_trace,
-                     build_matmul_trace, fa2_counts)
+from .traces import (CompiledTrace, DataflowCounts, Step, Trace,
+                     build_fa2_trace, build_matmul_trace, fa2_counts)
 from .workloads import (PAPER_WORKLOADS, SPATIAL, TEMPORAL, AttnWorkload,
                         get_workload)
 
@@ -19,9 +20,9 @@ __all__ = [
     "CacheGeometry", "SharedLLC",
     "CacheOrchestrator", "OrchestrationPlan",
     "PolicyConfig", "named_policy",
-    "SimConfig", "SimResult", "Simulator", "run_policy",
+    "SimConfig", "SimResult", "Simulator", "run_policies", "run_policy",
     "TMU", "DeadFIFO", "TMUParams", "TensorMeta",
-    "DataflowCounts", "Step", "Trace", "build_fa2_trace",
+    "CompiledTrace", "DataflowCounts", "Step", "Trace", "build_fa2_trace",
     "build_matmul_trace", "fa2_counts",
     "PAPER_WORKLOADS", "SPATIAL", "TEMPORAL", "AttnWorkload", "get_workload",
 ]

@@ -16,7 +16,7 @@ slice's ``B_GEAR`` are not allocated.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -24,7 +24,8 @@ from .policies import (BYPASS_DYNAMIC, BYPASS_NONE, BYPASS_STATIC,
                        GearController, PolicyConfig, make_controller)
 from .tmu import TMU
 
-# Access outcome codes (returned per line)
+# Access outcome codes (returned per line).  The numeric values encode
+# the outcome arithmetically: miss code = 1 + seen_before + 2*bypassed.
 HIT = 0
 COLD_MISS = 1
 CONFLICT_MISS = 2
@@ -32,6 +33,11 @@ BYPASSED_COLD = 3
 BYPASSED_CONFLICT = 4
 
 _MISS_CODES = (COLD_MISS, CONFLICT_MISS, BYPASSED_COLD, BYPASSED_CONFLICT)
+
+# sentinel for "invalid way" in the last_use / prio state arrays: larger
+# than any real LRU stamp or priority, so victim selection needs no
+# validity masking on its hot path
+_BIG = np.int64(1) << 60
 
 
 @dataclass(frozen=True)
@@ -79,6 +85,26 @@ class CacheGeometry:
         return set_idx % self.n_slices
 
 
+@dataclass
+class AccessPlan:
+    """Precomputed burst structure for :meth:`SharedLLC.access_planned`.
+
+    Holds what :meth:`SharedLLC.access_burst` would recompute on every
+    call for a fixed (addresses, geometry) pair: the set index of every
+    line and the same-set pass split.  ``passes`` is ``None`` when all
+    sets in the burst are distinct (single-shot fast path); otherwise it
+    lists, per pass, the ascending line indices whose set's k-th
+    occurrence falls in that pass — byte-identical chunking to
+    ``access_burst``.  Plans are geometry-specific but policy-independent,
+    so a policy sweep computes them once (see
+    ``CompiledTrace.plans_for``)."""
+
+    line_addrs: np.ndarray
+    sets: np.ndarray
+    passes: Optional[List[np.ndarray]] = None
+    tags: Optional[np.ndarray] = None
+
+
 class SharedLLC:
     """Vectorized set-associative shared cache with DCO policies."""
 
@@ -91,8 +117,10 @@ class SharedLLC:
         self.tags = np.full((S, A), -1, dtype=np.int64)
         self.valid = np.zeros((S, A), dtype=bool)
         self.dirty = np.zeros((S, A), dtype=bool)
-        self.last_use = np.zeros((S, A), dtype=np.int64)
-        self.prio = np.zeros((S, A), dtype=np.int64)
+        # invariant: invalid ways hold _BIG in last_use/prio (and -1 in
+        # tags), so lookup and victim selection skip validity masking
+        self.last_use = np.full((S, A), _BIG, dtype=np.int64)
+        self.prio = np.full((S, A), _BIG, dtype=np.int64)
         self._clock = 0  # monotone access counter for LRU
         self.controller: Optional[GearController] = make_controller(
             geom.n_slices, policy)
@@ -176,64 +204,95 @@ class SharedLLC:
         return out
 
     # ------------------------------------------------------------------
-    def _access_unique(self, line_addrs, sets, seen_before, is_write,
-                       bypass_eligible, force_bypass) -> np.ndarray:
-        n = line_addrs.shape[0]
-        tags = self.geom.tag_of(line_addrs)
+    def access_planned(
+        self,
+        plan: AccessPlan,
+        *,
+        seen_before: np.ndarray,
+        is_write=False,
+        bypass_eligible=True,
+        force_bypass=False,
+    ) -> np.ndarray:
+        """:meth:`access_burst` with the set mapping and pass split taken
+        from a precomputed :class:`AccessPlan` (same outcome codes and
+        state transitions; the per-call ``argsort``/``unique`` work is
+        hoisted out of the policy sweep's inner loop)."""
+        n = plan.line_addrs.shape[0]
         out = np.empty(n, dtype=np.int64)
-        is_write = np.broadcast_to(np.asarray(is_write, dtype=bool), (n,))
-        bypass_eligible = np.broadcast_to(
-            np.asarray(bypass_eligible, dtype=bool), (n,))
-        force_bypass = np.broadcast_to(
-            np.asarray(force_bypass, dtype=bool), (n,))
+        if n == 0:
+            return out
+        tags = plan.tags
+        if plan.passes is None:
+            out[:] = self._access_unique(plan.line_addrs, plan.sets,
+                                         seen_before, is_write,
+                                         bypass_eligible, force_bypass,
+                                         tags=tags)
+            return out
+        for sel in plan.passes:
+            out[sel] = self._access_unique(
+                plan.line_addrs[sel], plan.sets[sel],
+                _index(seen_before, sel), _index(is_write, sel),
+                _index(bypass_eligible, sel), _index(force_bypass, sel),
+                tags=None if tags is None else tags[sel])
+        return out
+
+    # ------------------------------------------------------------------
+    def _access_unique(self, line_addrs, sets, seen_before, is_write,
+                       bypass_eligible, force_bypass,
+                       tags=None) -> np.ndarray:
+        n = line_addrs.shape[0]
+        if tags is None:
+            tags = self.geom.tag_of(line_addrs)
+        out = np.empty(n, dtype=np.int64)
+        seen_before = _bool_vec(seen_before, n)
+        is_write = _bool_vec(is_write, n)
+        bypass_eligible = _bool_vec(bypass_eligible, n)
+        force_bypass = _bool_vec(force_bypass, n)
         self._clock += 1
         now = self._clock
 
+        # lookup: invalid ways hold tag -1 and real tags are >= 0, so a
+        # tag match alone implies validity (no valid-mask gather)
         set_tags = self.tags[sets]            # [n, A]
-        set_valid = self.valid[sets]
-        hit_mask_ways = set_valid & (set_tags == tags[:, None])
+        hit_mask_ways = set_tags == tags[:, None]
         hit = hit_mask_ways.any(axis=1)
         hit_way = np.argmax(hit_mask_ways, axis=1)
+        n_hit = int(hit.sum())
 
         # --- hits: refresh LRU ------------------------------------------------
-        if hit.any():
+        if n_hit:
             hs, hw = sets[hit], hit_way[hit]
             self.last_use[hs, hw] = now
             w = is_write[hit]
             if w.any():
                 self.dirty[hs[w], hw[w]] = True
             out[hit] = HIT
-            self.stats["hits"] += int(hit.sum())
+            self.stats["hits"] += n_hit
             # hits feed the eviction-rate denominator of the gear feedback
-            self._record_controller(sets[hit], np.zeros(int(hit.sum()),
-                                                        dtype=bool))
+            if self.controller is not None:
+                self._record_controller(hs, np.zeros(n_hit, dtype=bool))
+            if n_hit == n:
+                return out
 
         miss = ~hit
-        if not miss.any():
-            return out
-
         m_sets = sets[miss]
         m_tags = tags[miss]
         m_seen = seen_before[miss]
-        slice_ids = self.geom.slice_of_set(m_sets)
 
         # --- bypass decision (before allocation, paper §IV-D) ----------------
-        bypass = force_bypass[miss].copy()
         if self.policy.bypass != BYPASS_NONE:
-            gears = self.gear_of(slice_ids)
-            policy_bypass = (self._priorities(m_tags) < gears) \
-                & bypass_eligible[miss]
-            bypass |= policy_bypass
+            gears = self.gear_of(self.geom.slice_of_set(m_sets))
+            bypass = ((self._priorities(m_tags) < gears)
+                      & bypass_eligible[miss]) | force_bypass[miss]
+        else:
+            bypass = force_bypass[miss]
 
-        miss_codes = np.where(
-            bypass,
-            np.where(m_seen, BYPASSED_CONFLICT, BYPASSED_COLD),
-            np.where(m_seen, CONFLICT_MISS, COLD_MISS),
-        )
-        out[miss] = miss_codes
+        # outcome code = 1 + seen + 2*bypassed (see the constants above)
+        out[miss] = 1 + m_seen + 2 * bypass
+        n_conf = int(m_seen.sum())
         self.stats["bypassed"] += int(bypass.sum())
-        self.stats["cold_misses"] += int((~m_seen).sum())
-        self.stats["conflict_misses"] += int(m_seen.sum())
+        self.stats["cold_misses"] += (n - n_hit) - n_conf
+        self.stats["conflict_misses"] += n_conf
 
         # --- allocation (alloc-on-fill; write-allocate) -----------------------
         alloc = ~bypass
@@ -256,7 +315,8 @@ class SharedLLC:
         else:
             ev_full = np.zeros(m_sets.shape[0], dtype=bool)
 
-        self._record_controller(m_sets, ev_full)
+        if self.controller is not None:
+            self._record_controller(m_sets, ev_full)
         return out
 
     # ------------------------------------------------------------------
@@ -264,51 +324,54 @@ class SharedLLC:
                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Vectorized victim choice: invalid → dead → anti-thrash tier → LRU.
 
-        Returns (way, evicted_valid, evicted_was_dead) per set.
+        Relies on the state invariant that invalid ways hold ``_BIG`` in
+        ``last_use``/``prio``, so the LRU and anti-thrashing tiers need
+        no per-call validity masking.  Returns (way, evicted_valid,
+        evicted_was_dead) per set.
         """
         set_valid = self.valid[a_sets]       # [n, A]
-        set_tags = self.tags[a_sets]
-        set_lru = self.last_use[a_sets]
-        set_prio = self.prio[a_sets]
+        set_lru = self.last_use[a_sets]      # invalid ways hold _BIG
         n, A = set_valid.shape
-        BIG = np.int64(1) << 60
 
         # 1. invalid way available → fill it (no eviction)
-        has_invalid = ~set_valid.all(axis=1)
-        invalid_way = np.argmax(~set_valid, axis=1)
+        invalid_ways = ~set_valid
+        has_invalid = invalid_ways.any(axis=1)
+        invalid_way = np.argmax(invalid_ways, axis=1)
 
         # 2. dead-block prediction: victimize TMU-dead lines first (LRU among dead)
         if self.policy.dbp and self.tmu is not None and len(self.tmu.dead_fifo):
             fifo = np.asarray(self.tmu.dead_fifo.snapshot(), dtype=np.int64)
             p = self.tmu.params
             width = p.d_msb - p.d_lsb + 1
-            dead_ids = (set_tags >> p.d_lsb) & ((1 << width) - 1)
+            dead_ids = (self.tags[a_sets] >> p.d_lsb) & ((1 << width) - 1)
             dead_ways = set_valid & np.isin(dead_ids, fifo)
+            has_dead = dead_ways.any(axis=1)
+            dead_lru = np.where(dead_ways, set_lru, _BIG)
+            dead_way = np.argmin(dead_lru, axis=1)
         else:
-            dead_ways = np.zeros((n, A), dtype=bool)
-        has_dead = dead_ways.any(axis=1)
-        dead_lru = np.where(dead_ways, set_lru, BIG)
-        dead_way = np.argmin(dead_lru, axis=1)
+            has_dead = None
 
         # 3. anti-thrashing: lowest-priority tier present, tie-break LRU
+        # (invalid ways sit at prio _BIG, so they never define the tier
+        # unless the whole set is invalid — where has_invalid wins anyway)
         if self.policy.at:
-            prio_valid = np.where(set_valid, set_prio, BIG)
-            min_tier = prio_valid.min(axis=1, keepdims=True)
-            tier_ways = set_valid & (set_prio == min_tier)
-            tier_lru = np.where(tier_ways, set_lru, BIG)
-            at_way = np.argmin(tier_lru, axis=1)
+            set_prio = self.prio[a_sets]
+            min_tier = set_prio.min(axis=1, keepdims=True)
+            tier_ways = set_prio == min_tier
+            tier_lru = np.where(tier_ways, set_lru, _BIG)
+            fallback_way = np.argmin(tier_lru, axis=1)
         else:
-            at_way = None
+            # 4. plain LRU (invalid ways at _BIG lose to any valid way)
+            fallback_way = np.argmin(set_lru, axis=1)
 
-        # 4. plain LRU
-        lru_vals = np.where(set_valid, set_lru, BIG)
-        lru_way = np.argmin(lru_vals, axis=1)
-
-        fallback_way = at_way if at_way is not None else lru_way
-        way = np.where(has_dead, dead_way, fallback_way)
-        way = np.where(has_invalid, invalid_way, way)
         evicted_valid = ~has_invalid
-        evicted_dead = evicted_valid & has_dead
+        if has_dead is None:
+            way = fallback_way
+            evicted_dead = np.zeros(n, dtype=bool)
+        else:
+            way = np.where(has_dead, dead_way, fallback_way)
+            evicted_dead = evicted_valid & has_dead
+        way = np.where(has_invalid, invalid_way, way)
         return way, evicted_valid, evicted_dead
 
     # ------------------------------------------------------------------
@@ -334,6 +397,12 @@ def _index(x, sel):
     """Index ``x`` by ``sel`` if it is an array; pass scalars through."""
     arr = np.asarray(x)
     return arr[sel] if arr.ndim else x
+
+
+def _bool_vec(x, n):
+    """Per-line bool vector: pass bool arrays through, broadcast scalars."""
+    a = np.asarray(x, dtype=bool)
+    return a if a.ndim else np.broadcast_to(a, (n,))
 
 
 def is_miss(codes: np.ndarray) -> np.ndarray:

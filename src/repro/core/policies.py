@@ -123,9 +123,10 @@ class GearController:
         self.last_rate = np.zeros(n_slices, dtype=np.float64)
 
     def record(self, slice_ids: np.ndarray, evicted: np.ndarray) -> None:
-        np.add.at(self._accesses, slice_ids, 1)
+        self._accesses += np.bincount(slice_ids, minlength=self.n_slices)
         if evicted.any():
-            np.add.at(self._evictions, slice_ids[evicted], 1)
+            self._evictions += np.bincount(slice_ids[evicted],
+                                           minlength=self.n_slices)
 
     def tick(self, now_cycles: float) -> None:
         if now_cycles - self._window_start < self.cfg.window_cycles:

@@ -18,18 +18,28 @@ conflict/capacity misses are dispersed and overlap with compute.  The
 difference from the analytical model (``analytical.py``) is that all
 ``n_*`` here come from the *simulated cache state* (real evictions, dead
 blocks, per-slice gears), not from closed forms.
+
+Execution engines:
+
+* the default **compiled** engine slices the flat round-indexed arrays of
+  a :class:`~repro.core.traces.CompiledTrace` (built once per trace and
+  shared across policies — see :func:`run_policies` for batch sweeps);
+* the **step** engine re-walks the Python ``Step`` lists per round.  It
+  is the original reference implementation, kept as the oracle for the
+  compiled path (``tests/test_compiled_trace.py`` asserts bit-identical
+  counters) — both engines produce byte-identical ``SimResult``\\ s.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple, Union
 
 import numpy as np
 
 from . import cache as C
 from .cache import CacheGeometry, SharedLLC
-from .policies import PolicyConfig
+from .policies import PolicyConfig, named_policy
 from .tmu import TMU, TMUParams, TensorMeta
 from .traces import Trace
 
@@ -75,6 +85,7 @@ class SimResult:
     writebacks: int
     dead_evictions: int
     flops: float
+    freq_ghz: float = 2.0
     history: Dict[str, np.ndarray] = field(default_factory=dict)
 
     @property
@@ -91,7 +102,7 @@ class SimResult:
 
     @property
     def time_ms(self) -> float:
-        return self.cycles / 2.0e6  # 2 GHz
+        return self.cycles / (self.freq_ghz * 1e6)
 
     def summary(self) -> str:
         return (f"{self.name:34s} {self.policy:24s} "
@@ -108,7 +119,9 @@ class Simulator:
         self.policy = policy
         self.tmu_params = tmu_params or TMUParams(b_bits=policy.b_bits)
 
-    def run(self, trace: Trace, record_history: bool = True) -> SimResult:
+    # ------------------------------------------------------------------
+    def _fresh_state(self, trace: Trace) -> Tuple[CacheGeometry, TMU,
+                                                  SharedLLC]:
         cfg = self.cfg
         geom = CacheGeometry(cfg.llc_bytes, cfg.line_bytes, cfg.llc_assoc,
                              cfg.llc_slices)
@@ -120,6 +133,114 @@ class Simulator:
         for meta in trace.tensors.values():
             tmu.register(meta)
         llc = SharedLLC(geom, self.policy, tmu=tmu)
+        return geom, tmu, llc
+
+    def run(self, trace: Trace, record_history: bool = True,
+            *, engine: str = "compiled") -> SimResult:
+        """Simulate ``trace`` under this simulator's policy.
+
+        ``engine="compiled"`` (default) drives the cached
+        :class:`~repro.core.traces.CompiledTrace`; ``engine="steps"``
+        re-walks the Python step lists (reference oracle).
+        """
+        if self.cfg.line_bytes != trace.line_bytes:
+            # traces bake line granularity into their addresses; a
+            # mismatched cache-line size silently corrupts the seen
+            # bitmaps (and used to IndexError deep in the round loop)
+            raise ValueError(
+                f"SimConfig.line_bytes={self.cfg.line_bytes} does not "
+                f"match trace line_bytes={trace.line_bytes}")
+        if engine == "compiled":
+            return self._run_compiled(trace, record_history)
+        if engine == "steps":
+            return self._run_steps(trace, record_history)
+        raise ValueError(f"unknown engine {engine!r}")
+
+    # ------------------------------------------------------------------
+    # compiled engine: slice flat per-round arrays
+    # ------------------------------------------------------------------
+    def _run_compiled(self, trace: Trace, record_history: bool) -> SimResult:
+        cfg = self.cfg
+        ct = trace.compiled(cfg.line_bytes)
+        geom, tmu, llc = self._fresh_state(trace)
+        plans = ct.plans_for(geom)
+        tll_tags = ct.tll_tags_for(geom)   # per-geometry, sweep-shared
+
+        seen = np.zeros(ct.n_seen_lines, dtype=bool)
+        gqa = self.policy.gqa_variant
+        clock = 0.0
+        total_mshr_hits = 0
+        total_dram_lines = 0
+        total_flops = 0.0
+        hist_cycles: List[float] = []
+        hist_hits: List[int] = []
+        hist_acc: List[int] = []
+        hist_gear: List[float] = []
+
+        round_off = ct.round_off
+        tll_off = ct.tll_off
+        for r in range(ct.n_rounds):
+            a0, a1 = round_off[r], round_off[r + 1]
+            if a0 == a1:
+                clock += cfg.round_overhead_cycles
+                continue
+
+            # contention only gates gqa eligibility; reading it has no
+            # side effects, so non-gqa policies skip the check
+            contended = (gqa and llc.controller is not None
+                         and bool(llc.controller.contended().any()))
+            sel = slice(a0, a1)
+            dense = ct.u_dense[sel]
+            seen_b = seen[dense]           # fancy indexing → fresh copy
+            seen[dense] = True
+            elig = (ct.u_nonleader[sel] & contended) if gqa else True
+            n_dups = int(ct.n_acc_round[r]) - (a1 - a0)
+            total_mshr_hits += n_dups
+
+            wb_before = llc.stats["writebacks"]
+            codes = llc.access_planned(plans[r],
+                                       seen_before=seen_b,
+                                       is_write=ct.u_write[sel],
+                                       bypass_eligible=elig,
+                                       force_bypass=ct.u_force[sel])
+            t0, t1 = tll_off[r], tll_off[r + 1]
+            if t1 > t0:
+                tmu.on_access_batch(ct.tll_tids[t0:t1], ct.tll_tiles[t0:t1],
+                                    tll_tags[t0:t1], ct.tll_nacc[t0:t1])
+
+            n_hit = int((codes == C.HIT).sum()) + n_dups
+            cold = int(((codes == C.COLD_MISS)
+                        | (codes == C.BYPASSED_COLD)).sum())
+            cf = int(((codes == C.CONFLICT_MISS)
+                      | (codes == C.BYPASSED_CONFLICT)).sum())
+            wb_round = llc.stats["writebacks"] - wb_before
+            dram_cold = cold
+            dram_cf = cf + wb_round
+            total_dram_lines += dram_cold + dram_cf
+            flops_round = float(ct.flops_round[r])
+            total_flops += flops_round
+
+            clock += self._round_time(n_hit, cold, cf, dram_cold, dram_cf,
+                                      flops_round)
+            llc.tick(clock)
+
+            if record_history:
+                hist_cycles.append(clock)
+                hist_hits.append(n_hit)
+                hist_acc.append(n_hit + cold + cf)
+                if llc.controller is not None:
+                    hist_gear.append(float(llc.controller.gear.mean()))
+
+        return self._result(trace, llc, clock, total_mshr_hits,
+                            total_dram_lines, total_flops, record_history,
+                            hist_cycles, hist_hits, hist_acc, hist_gear)
+
+    # ------------------------------------------------------------------
+    # step engine: reference implementation over Python Step lists
+    # ------------------------------------------------------------------
+    def _run_steps(self, trace: Trace, record_history: bool) -> SimResult:
+        cfg = self.cfg
+        geom, tmu, llc = self._fresh_state(trace)
 
         # per-tensor "ever fetched" bitmaps for cold/conflict classification
         seen: Dict[int, np.ndarray] = {
@@ -197,15 +318,20 @@ class Simulator:
             # merged into one in-flight fill — policy-independent, even for
             # bypassed lines (an MSHR entry exists for the duration of the
             # DRAM fetch whether or not the fill allocates).  Only the
-            # first occurrence touches the cache state.
-            _, first_idx = np.unique(addrs, return_index=True)
+            # first occurrence touches the cache state, but write intent is
+            # OR-ed over the duplicates so a load+store merge still dirties
+            # the line (writeback accounting).
+            _, first_idx, inv = np.unique(addrs, return_index=True,
+                                          return_inverse=True)
             n_dups = addrs.shape[0] - first_idx.shape[0]
             total_mshr_hits += n_dups
+            write_m = np.bincount(inv, weights=write_b,
+                                  minlength=first_idx.shape[0]) > 0
 
             wb_before = llc.stats["writebacks"]
             codes = llc.access_burst(addrs[first_idx],
                                      seen_before=seen_b[first_idx],
-                                     is_write=write_b[first_idx],
+                                     is_write=write_m,
                                      bypass_eligible=elig_b[first_idx],
                                      force_bypass=force_b[first_idx])
 
@@ -234,6 +360,14 @@ class Simulator:
                 if llc.controller is not None:
                     hist_gear.append(float(llc.controller.gear.mean()))
 
+        return self._result(trace, llc, clock, total_mshr_hits,
+                            total_dram_lines, total_flops, record_history,
+                            hist_cycles, hist_hits, hist_acc, hist_gear)
+
+    # ------------------------------------------------------------------
+    def _result(self, trace, llc, clock, mshr_hits, dram_lines, flops,
+                record_history, hist_cycles, hist_hits, hist_acc,
+                hist_gear) -> SimResult:
         history = {}
         if record_history:
             history = {
@@ -246,14 +380,14 @@ class Simulator:
 
         return SimResult(
             name=trace.name, policy=self.policy.name, cycles=clock,
-            hits=llc.stats["hits"], mshr_hits=total_mshr_hits,
+            hits=llc.stats["hits"], mshr_hits=mshr_hits,
             cold_misses=llc.stats["cold_misses"],
             conflict_misses=llc.stats["conflict_misses"],
             bypassed=llc.stats["bypassed"],
-            dram_lines=total_dram_lines,
+            dram_lines=dram_lines,
             writebacks=llc.stats["writebacks"],
             dead_evictions=llc.stats["dead_evictions"],
-            flops=total_flops, history=history,
+            flops=flops, freq_ghz=self.cfg.freq_ghz, history=history,
         )
 
     # ------------------------------------------------------------------
@@ -272,8 +406,37 @@ class Simulator:
         return t_hit + t_cold + max(t_comp, t_cf) + cfg.round_overhead_cycles
 
 
-def run_policy(trace: Trace, policy: PolicyConfig,
+PolicyLike = Union[str, PolicyConfig]
+
+
+def _resolve_policy(p: PolicyLike) -> PolicyConfig:
+    return named_policy(p) if isinstance(p, str) else p
+
+
+def run_policy(trace: Trace, policy: PolicyLike,
                cfg: Optional[SimConfig] = None,
-               record_history: bool = True) -> SimResult:
-    return Simulator(cfg or SimConfig(), policy).run(
-        trace, record_history=record_history)
+               record_history: bool = True,
+               engine: str = "compiled") -> SimResult:
+    return Simulator(cfg or SimConfig(), _resolve_policy(policy)).run(
+        trace, record_history=record_history, engine=engine)
+
+
+def run_policies(trace: Trace, policies: Iterable[PolicyLike],
+                 cfg: Optional[SimConfig] = None,
+                 record_history: bool = False,
+                 tmu_params: Optional[TMUParams] = None) -> List[SimResult]:
+    """Batch policy sweep over one trace (the paper's figure workflow).
+
+    The trace is lowered once (``trace.compiled``) and the lowering —
+    plus the geometry-dependent access plans — is shared by every policy,
+    so sweeping N policies costs one compile plus N fast vectorized runs
+    instead of N Python trace walks.  Results come back in input order
+    with counters bit-identical to individual :func:`run_policy` calls.
+    """
+    cfg = cfg or SimConfig()
+    trace.compiled(cfg.line_bytes)       # build once, shared by all runs
+    return [
+        Simulator(cfg, _resolve_policy(p), tmu_params).run(
+            trace, record_history=record_history)
+        for p in policies
+    ]

@@ -30,6 +30,8 @@ from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, Optional, Tuple
 
+import numpy as np
+
 PHYS_ADDR_BITS = 48
 
 
@@ -242,6 +244,49 @@ class TMU:
             if len(self._live) > self.tile_entries:
                 self._live.popitem(last=False)
                 self.stats["live_overflow_evictions"] += 1
+
+    def on_access_batch(self, tensor_ids, tile_idxs, tags, n_accs) -> None:
+        """Batched :meth:`on_access` over a pre-resolved TLL feed.
+
+        The caller (the compiled-trace simulator) guarantees every entry
+        is the tile-last-line of a registered, non-``bypass_all`` tensor,
+        so the per-call linear tensor lookup and the TLL address check are
+        skipped and the dead-id bit slicing is done vectorized up front.
+        State transitions (accCnt bumps, retirement order, dead-FIFO
+        pushes, live-table LRU/overflow) are identical to issuing the
+        calls one at a time in feed order.
+        """
+        tensor_ids = np.asarray(tensor_ids)
+        n = tensor_ids.shape[0]
+        if n == 0:
+            return
+        self.stats["tll_accesses"] += int(n)
+        p = self.params
+        width = p.d_msb - p.d_lsb + 1
+        dead_ids = ((np.asarray(tags, dtype=np.int64) >> p.d_lsb)
+                    & ((1 << width) - 1)).tolist()
+        live = self._live
+        fifo = self.dead_fifo
+        retired = drops = overflow = 0
+        for tid, tile, did, n_acc in zip(
+                tensor_ids.tolist(), np.asarray(tile_idxs).tolist(),
+                dead_ids, np.asarray(n_accs).tolist()):
+            key = (tid, tile)
+            cnt = live.get(key, 0) + 1
+            if cnt >= n_acc:
+                live.pop(key, None)
+                if fifo.push(did) is not None:
+                    drops += 1
+                retired += 1
+            else:
+                live[key] = cnt
+                live.move_to_end(key)
+                if len(live) > self.tile_entries:
+                    live.popitem(last=False)
+                    overflow += 1
+        self.stats["tiles_retired"] += retired
+        self.stats["dead_fifo_drops"] += drops
+        self.stats["live_overflow_evictions"] += overflow
 
     def is_dead(self, tag: int) -> bool:
         return self.params.dead_id(tag) in self.dead_fifo

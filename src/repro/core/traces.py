@@ -18,6 +18,15 @@ sharing group by one tile per rank ("scheduling skew"), so inter-core
 reuses appear as short-reuse-distance LLC hits rather than same-cycle MSHR
 merges — this reproduces the paper's observation that blind bypassing
 destroys inter-core reuse (§IV-E) while LRU and ``at`` keep it.
+
+Policy sweeps (one trace, many policies — every figure of the paper) go
+through :class:`CompiledTrace`: the per-core ``Step`` lists are lowered
+*once* into flat round-indexed numpy arrays (line addresses, dense seen
+indices, merged write flags, TLL feed, CSR-style round offsets).  The
+compiled form is built lazily by :meth:`Trace.compiled` and cached on the
+``Trace`` so the lowering cost is shared across all policies of a sweep;
+``Simulator.run`` slices these arrays per round instead of re-walking the
+Python step lists.
 """
 
 from __future__ import annotations
@@ -51,6 +60,8 @@ class Trace:
     core_is_leader: List[bool]       # leader of its sharing group?
     line_bytes: int = LINE_BYTES
     workload: Optional[AttnWorkload] = None
+    _compiled: Dict[int, "CompiledTrace"] = field(
+        default_factory=dict, init=False, repr=False, compare=False)
 
     @property
     def n_cores(self) -> int:
@@ -68,6 +79,251 @@ class Trace:
 
     def total_bytes_touched(self) -> int:
         return sum(m.size_bytes for m in self.tensors.values())
+
+    def compiled(self, line_bytes: int = 0) -> "CompiledTrace":
+        """Lower to flat round-indexed arrays; built once, cached here.
+
+        ``line_bytes`` is validation only: the simulator passes its
+        cache-line size and anything other than the trace's own line
+        granularity is rejected (the addresses bake it in).  The single
+        cached lowering is shared by every policy and every cache
+        geometry of a sweep.
+        """
+        lb = line_bytes or self.line_bytes
+        if lb != self.line_bytes:
+            # the trace bakes its line granularity into every address;
+            # lowering at another line size would silently corrupt the
+            # seen-bitmap layout and the TLL feed
+            raise ValueError(
+                f"cannot compile a {self.line_bytes}-byte-line trace at "
+                f"line_bytes={lb}")
+        ct = self._compiled.get(lb)
+        if ct is None:
+            ct = CompiledTrace.build(self, lb)
+            self._compiled[lb] = ct
+        return ct
+
+
+class CompiledTrace:
+    """Flat, round-indexed lowering of a :class:`Trace` (compiled-trace IR).
+
+    One build replaces the per-policy Python walk over ``core_steps``:
+    every round's accesses are pre-merged (MSHR semantics: same-line
+    requests of one round collapse to the first occurrence, write intents
+    OR-ed across duplicates) and stored in CSR layout — ``round_off[r] :
+    round_off[r+1]`` slices the per-line arrays of round ``r``.
+
+    Per unique line and round (arrays of length ``U``):
+
+    * ``u_addrs``      byte address of the line (ascending within a round)
+    * ``u_dense``      index into the run's global "seen" bitmap
+    * ``u_write``      OR of the write intents of all merged duplicates
+    * ``u_force``      tensor-level ``bypass_all``
+    * ``u_nonleader``  issuing core (first occurrence) is a gqa non-leader
+
+    Per round: ``n_acc_round`` (pre-merge request count, for MSHR-hit
+    accounting) and ``flops_round``.  The TLL feed for the TMU is a second
+    CSR block (``tll_*``) holding pre-resolved (tensor, tile, nAcc) per
+    tile-last-line access, in issue order.
+
+    Cache-geometry-dependent state (set indices, same-set pass splitting)
+    is *not* baked in; :meth:`plans_for` computes it per geometry and
+    caches it so every policy of a sweep reuses it.
+    """
+
+    def __init__(self, line_bytes: int, n_rounds: int, n_seen_lines: int,
+                 u_addrs, u_dense, u_write, u_force, u_nonleader,
+                 round_off, n_acc_round, flops_round,
+                 tll_addrs, tll_tids, tll_tiles, tll_nacc, tll_off):
+        self.line_bytes = line_bytes
+        self.n_rounds = n_rounds
+        self.n_seen_lines = n_seen_lines
+        self.u_addrs = u_addrs
+        self.u_dense = u_dense
+        self.u_write = u_write
+        self.u_force = u_force
+        self.u_nonleader = u_nonleader
+        self.round_off = round_off
+        self.n_acc_round = n_acc_round
+        self.flops_round = flops_round
+        self.tll_addrs = tll_addrs
+        self.tll_tids = tll_tids
+        self.tll_tiles = tll_tiles
+        self.tll_nacc = tll_nacc
+        self.tll_off = tll_off
+        self._plans: Dict[Tuple[int, bool], list] = {}
+        self._tll_tags: Dict[int, np.ndarray] = {}
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def build(cls, trace: Trace, line_bytes: int) -> "CompiledTrace":
+        n_rounds = trace.n_rounds
+        tensors = trace.tensors
+        tr_lb = trace.line_bytes
+
+        # dense "seen"-bitmap layout: one contiguous range per tensor
+        dense_off: Dict[int, int] = {}
+        n_seen = 0
+        for tid, m in tensors.items():
+            dense_off[tid] = n_seen
+            n_seen += m.size_bytes // line_bytes
+
+        # one record per bulk tile transfer (expanded to lines vectorized)
+        p_round: List[int] = []
+        p_start: List[int] = []      # first line's byte address
+        p_k: List[int] = []          # lines in the tile
+        p_dense0: List[int] = []     # first line's dense seen index
+        p_write: List[bool] = []
+        p_force: List[bool] = []
+        p_nonlead: List[bool] = []
+        t_round: List[int] = []      # TLL feed, in issue order
+        t_addr: List[int] = []
+        t_tid: List[int] = []
+        t_tile: List[int] = []
+        t_nacc: List[int] = []
+        flops_round = np.zeros(n_rounds, dtype=np.float64)
+
+        nonleader = [not l for l in trace.core_is_leader]
+        for r in range(n_rounds):
+            for c, steps in enumerate(trace.core_steps):
+                if r >= len(steps):
+                    continue
+                step = steps[r]
+                flops_round[r] += step.flops
+                for (tid, tile), is_store in (
+                        [(l, False) for l in step.loads]
+                        + [(s, True) for s in step.stores]):
+                    meta = tensors[tid]
+                    start = meta.base_addr + tile * meta.tile_bytes
+                    p_round.append(r)
+                    p_start.append(start)
+                    p_k.append(meta.tile_bytes // tr_lb)
+                    p_dense0.append(dense_off[tid]
+                                    + (start - meta.base_addr) // line_bytes)
+                    p_write.append(is_store)
+                    p_force.append(meta.bypass_all)
+                    p_nonlead.append(nonleader[c])
+                    if not is_store and not meta.bypass_all:
+                        t_round.append(r)
+                        t_addr.append(meta.tile_last_line(tile, line_bytes))
+                        t_tid.append(tid)
+                        t_tile.append(tile)
+                        t_nacc.append(meta.n_acc)
+
+        k = np.asarray(p_k, dtype=np.int64)
+        n_acc_total = int(k.sum()) if k.size else 0
+        if n_acc_total:
+            # expand tile records to per-line arrays (CSR expansion)
+            rep = np.repeat(np.arange(k.size), k)
+            within = np.arange(n_acc_total) - np.repeat(
+                np.concatenate(([0], np.cumsum(k)[:-1])), k)
+            a_round = np.asarray(p_round, dtype=np.int64)[rep]
+            a_addr = (np.asarray(p_start, dtype=np.int64)[rep]
+                      + within * tr_lb)
+            a_dense = np.asarray(p_dense0, dtype=np.int64)[rep] + within
+            a_write = np.asarray(p_write, dtype=bool)[rep]
+            a_force = np.asarray(p_force, dtype=bool)[rep]
+            a_nonlead = np.asarray(p_nonlead, dtype=bool)[rep]
+
+            # per-round MSHR merge: stable sort by (round, addr); the first
+            # element of each (round, addr) run is the first occurrence in
+            # issue order, so seen/force/nonleader take its values while
+            # write intent ORs over the whole run.
+            order = np.lexsort((a_addr, a_round))
+            s_round = a_round[order]
+            s_addr = a_addr[order]
+            starts = np.ones(n_acc_total, dtype=bool)
+            starts[1:] = (s_round[1:] != s_round[:-1]) \
+                | (s_addr[1:] != s_addr[:-1])
+            start_idx = np.nonzero(starts)[0]
+            u_addrs = s_addr[start_idx]
+            u_round = s_round[start_idx]
+            u_dense = a_dense[order][start_idx]
+            u_force = a_force[order][start_idx]
+            u_nonleader = a_nonlead[order][start_idx]
+            u_write = np.maximum.reduceat(
+                a_write[order].astype(np.int8), start_idx).astype(bool)
+            round_off = np.searchsorted(u_round,
+                                        np.arange(n_rounds + 1))
+            n_acc_round = np.bincount(a_round, minlength=n_rounds)
+        else:
+            u_addrs = u_dense = np.empty(0, dtype=np.int64)
+            u_write = u_force = u_nonleader = np.empty(0, dtype=bool)
+            round_off = np.zeros(n_rounds + 1, dtype=np.int64)
+            n_acc_round = np.zeros(n_rounds, dtype=np.int64)
+
+        tll_off = np.concatenate((
+            [0], np.cumsum(np.bincount(np.asarray(t_round, dtype=np.int64),
+                                       minlength=n_rounds))
+        )).astype(np.int64)
+        return cls(
+            line_bytes, n_rounds, n_seen,
+            u_addrs, u_dense, u_write, u_force, u_nonleader,
+            round_off.astype(np.int64), n_acc_round.astype(np.int64),
+            flops_round,
+            np.asarray(t_addr, dtype=np.int64),
+            np.asarray(t_tid, dtype=np.int64),
+            np.asarray(t_tile, dtype=np.int64),
+            np.asarray(t_nacc, dtype=np.int64),
+            tll_off,
+        )
+
+    # ------------------------------------------------------------------
+    def tll_tags_for(self, geom) -> np.ndarray:
+        """Cache tags of the TLL feed for one geometry, cached like
+        :meth:`plans_for` so a policy sweep computes them once."""
+        tags = self._tll_tags.get(geom.num_sets)
+        if tags is None:
+            tags = (self.tll_addrs // self.line_bytes) // geom.num_sets
+            self._tll_tags[geom.num_sets] = tags
+        return tags
+
+    # ------------------------------------------------------------------
+    def plans_for(self, geom) -> list:
+        """Per-round :class:`~repro.core.cache.AccessPlan` list for one
+        cache geometry (set mapping + same-set pass splitting), cached so
+        every policy of a sweep shares it.  Entries are ``None`` for empty
+        rounds."""
+        key = (geom.num_sets, geom.hash_sets)
+        plans = self._plans.get(key)
+        if plans is not None:
+            return plans
+        from .cache import AccessPlan
+
+        sets_all = geom.set_of(self.u_addrs)
+        tags_all = geom.tag_of(self.u_addrs)
+        n = self.u_addrs.shape[0]
+        u_round = np.repeat(np.arange(self.n_rounds),
+                            np.diff(self.round_off))
+        # occurrence rank of each line's set within its round (stable):
+        # rank k goes into same-set pass k, replicating access_burst
+        order = np.lexsort((sets_all, u_round))
+        s_round = u_round[order]
+        s_sets = sets_all[order]
+        starts = np.ones(n, dtype=bool)
+        if n:
+            starts[1:] = (s_round[1:] != s_round[:-1]) \
+                | (s_sets[1:] != s_sets[:-1])
+        run_start = np.maximum.accumulate(
+            np.where(starts, np.arange(n), 0))
+        pass_sorted = np.arange(n) - run_start
+        pass_idx = np.empty(n, dtype=np.int64)
+        pass_idx[order] = pass_sorted
+
+        plans = []
+        for r in range(self.n_rounds):
+            a0, a1 = self.round_off[r], self.round_off[r + 1]
+            if a0 == a1:
+                plans.append(None)
+                continue
+            pi = pass_idx[a0:a1]
+            mp = int(pi.max())
+            passes = None if mp == 0 else [
+                np.nonzero(pi == p)[0] for p in range(mp + 1)]
+            plans.append(AccessPlan(self.u_addrs[a0:a1], sets_all[a0:a1],
+                                    passes, tags_all[a0:a1]))
+        self._plans[key] = plans
+        return plans
 
 
 class _Allocator:

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.sharding import act_axes, constrain, current_mesh
 from repro.sharding.api import ACT_SEQ, logical_spec
 
@@ -48,7 +49,7 @@ def row_parallel_out(y: jnp.ndarray, w: jnp.ndarray) -> Optional[jnp.ndarray]:
         return jax.lax.psum_scatter(part, "model", scatter_dimension=1,
                                     tiled=True)
 
-    return jax.shard_map(
+    return shard_map(
         f, mesh=mesh,
         in_specs=(P(dp, None, "model"), P("model", None)),
         out_specs=P(dp, "model", None), check_vma=False)(y, w)

@@ -149,6 +149,7 @@ def _ssd_inputs(key, b, s, h, g, p, n, dtype):
 
 
 @pytest.mark.parametrize("b,s,h,g,p,n,chunk,dtype", SSD_CASES)
+@pytest.mark.slow
 def test_ssd_kernel_matches_chunked_ref(b, s, h, g, p, n, chunk, dtype):
     x, dt, A, B, C = _ssd_inputs(jax.random.key(5), b, s, h, g, p, n, dtype)
     y, state = ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=True)
@@ -159,6 +160,7 @@ def test_ssd_kernel_matches_chunked_ref(b, s, h, g, p, n, chunk, dtype):
     np.testing.assert_allclose(state, state_ref, rtol=tol, atol=tol)
 
 
+@pytest.mark.slow
 def test_ssd_chunked_matches_sequential():
     """The chunked SSD algorithm (model path) vs O(S) recurrence."""
     x, dt, A, B, C = _ssd_inputs(jax.random.key(6), 2, 128, 2, 1, 32, 16,

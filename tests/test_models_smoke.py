@@ -41,6 +41,7 @@ def test_loss_finite_and_positive(arch):
     assert np.isfinite(float(loss)) and float(loss) > 0
 
 
+@pytest.mark.slow
 def test_train_grad_step_no_nans(arch):
     cfg, params = arch
     tokens = _batch(cfg, jax.random.key(3))
@@ -56,6 +57,7 @@ def test_train_grad_step_no_nans(arch):
         assert bool(jnp.isfinite(g.astype(jnp.float32)).all())
 
 
+@pytest.mark.slow
 def test_prefill_then_decode_matches_forward(arch):
     """Decode with a prefilled cache must reproduce full-forward logits."""
     cfg, params = arch

@@ -4,6 +4,7 @@ import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import abstract_mesh
 from repro.sharding import act_axes, constrain, logical_spec, use_mesh
 from repro.sharding.api import ACT_SEQ
 
@@ -11,7 +12,7 @@ from repro.sharding.api import ACT_SEQ
 @pytest.fixture
 def mesh():
     # AbstractMesh: real axis sizes without needing 256 devices
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 def test_no_mesh_is_noop():
@@ -57,7 +58,7 @@ def test_act_axes_flag():
 
 
 def test_multipod_spec():
-    mesh = jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     spec = logical_spec(("dp", None, "tp"), mesh)
     assert spec == P(("pod", "data"), None, "model")
 

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import shard_map
 from repro.configs import get_arch, reduce_for_smoke
 from repro.checkpoint import CheckpointManager
 from repro.data import SyntheticLM, make_batch
@@ -36,6 +37,7 @@ def test_lr_schedule_shape():
     assert lrs[4] == pytest.approx(0.1, rel=1e-3)
 
 
+@pytest.mark.slow
 def test_train_loss_decreases():
     params = init_params(CFG, jax.random.key(0))
     state = init_train_state(params)
@@ -50,6 +52,7 @@ def test_train_loss_decreases():
     assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2
 
 
+@pytest.mark.slow
 def test_grad_accumulation_matches_full_batch():
     params = init_params(CFG, jax.random.key(0))
     tokens = jnp.asarray(make_batch(CFG.vocab, 8, 32))
@@ -102,7 +105,7 @@ def test_compressed_psum_single_shard_roundtrip():
         return compressed_psum_mean(g, e, "pod")
 
     from jax.sharding import PartitionSpec as P
-    out, err = jax.jit(jax.shard_map(
+    out, err = jax.jit(shard_map(
         f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
         check_vma=False))(g, e)
     q_err = np.abs(np.asarray(out["w"]) - np.asarray(g["w"]))
@@ -118,7 +121,7 @@ def test_compressed_psum_error_feedback_converges():
     g = {"w": jnp.asarray([[0.003, -0.7], [0.31, 0.02]])}
     e = init_error_feedback(g)
     from jax.sharding import PartitionSpec as P
-    f = jax.jit(jax.shard_map(
+    f = jax.jit(shard_map(
         lambda g, e: compressed_psum_mean(g, e, "pod"), mesh=mesh,
         in_specs=(P(), P()), out_specs=(P(), P()), check_vma=False))
     total = jnp.zeros_like(g["w"])
@@ -175,6 +178,7 @@ def test_checkpoint_survives_corruption(tmp_path):
     np.testing.assert_allclose(np.asarray(restored["w"]), np.ones(8))
 
 
+@pytest.mark.slow
 def test_checkpoint_resume_training(tmp_path):
     """Kill-and-resume: state restored from disk continues bit-exactly."""
     params = init_params(CFG, jax.random.key(0))
@@ -217,6 +221,7 @@ def test_watchdog_flags_stragglers():
 # ---------------------------------------------------------------------------
 # serve engine
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 def test_serve_engine_batched_matches_single():
     cfg = CFG
     params = init_params(cfg, jax.random.key(0))
