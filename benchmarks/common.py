@@ -11,12 +11,16 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Callable, Dict, Iterable, List
+from typing import Dict, Iterable, List
 
 REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports",
                           "benchmarks")
 
 MB = 2 ** 20
+
+#: every ``emit`` call of the current process, in order — the harness's
+#: ``--json`` mode serializes these as the machine-readable run record
+ROWS: List[Dict[str, object]] = []
 
 
 def policy_sweep(trace, policies: Iterable[str], cfg,
@@ -35,7 +39,21 @@ def policy_sweep(trace, policies: Iterable[str], cfg,
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
+    ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                 "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_rows(tag: str, **meta) -> str:
+    """Write all rows emitted since the last call to ``BENCH_<tag>.json``
+    (the cross-PR benchmark trajectory record) and reset the buffer."""
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    path = os.path.normpath(os.path.join(REPORT_DIR, f"BENCH_{tag}.json"))
+    rows, ROWS[:] = list(ROWS), []
+    with open(path, "w") as f:
+        json.dump({"rows": rows, "meta": meta, "unix_time": time.time()},
+                  f, indent=1, default=float)
+    return path
 
 
 def save(name: str, payload) -> str:

@@ -2,7 +2,10 @@
 
 Prints ``name,us_per_call,derived`` CSV rows and writes full tables to
 reports/benchmarks/.  ``--full`` sweeps the paper's complete grids;
-``--only NAME`` runs a single benchmark.
+``--only NAME`` runs a single benchmark (unknown names are an error, not
+a silent no-op); ``--json [TAG]`` additionally writes the emitted rows to
+``reports/benchmarks/BENCH_<TAG>.json`` so the bench trajectory can be
+tracked across PRs.
 """
 
 from __future__ import annotations
@@ -11,9 +14,9 @@ import argparse
 import sys
 import traceback
 
-from . import (fig3_hitrate, fig4_policies, fig5_bbits, fig6_bypass,
+from . import (common, fig3_hitrate, fig4_policies, fig5_bbits, fig6_bypass,
                fig7_gear, fig8_dbp, fig9_validation, fig10_longctx,
-               roofline_bench, sweep_perf, table2_tmu)
+               roofline_bench, suite_bench, sweep_perf, table2_tmu)
 
 BENCHMARKS = {
     "table2_tmu": table2_tmu.run,
@@ -27,15 +30,26 @@ BENCHMARKS = {
     "fig10_longctx": fig10_longctx.run,
     "roofline": roofline_bench.run,
     "sweep_perf": sweep_perf.run,
+    "suite_bench": suite_bench.run,
 }
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale grids (slow)")
-    ap.add_argument("--only", default=None)
-    args = ap.parse_args()
+    ap.add_argument("--only", default=None,
+                    help="run a single benchmark by name")
+    ap.add_argument("--json", nargs="?", const="latest", default=None,
+                    metavar="TAG",
+                    help="also write the emitted rows to "
+                         "reports/benchmarks/BENCH_<TAG>.json")
+    args = ap.parse_args(argv)
+
+    if args.only is not None and args.only not in BENCHMARKS:
+        raise SystemExit(
+            f"unknown benchmark {args.only!r}; available: "
+            f"{', '.join(sorted(BENCHMARKS))}")
 
     print("name,us_per_call,derived")
     failed = []
@@ -48,6 +62,9 @@ def main() -> None:
             failed.append(name)
             print(f"{name},0,ERROR:{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
+    if args.json is not None:
+        path = common.save_rows(args.json, full=args.full, failed=failed)
+        print(f"# rows written to {path}", file=sys.stderr)
     if failed:
         raise SystemExit(f"failed: {failed}")
 

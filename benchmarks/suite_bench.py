@@ -1,0 +1,104 @@
+"""Scenario-suite sweep: every dataflow the IR expresses × the fig-4
+policy set, cross-validated against the analytical model (§V-D/§VI-G).
+
+For each :class:`~repro.dataflows.SuiteCase` the spec is lowered once and
+swept under ``SUITE_POLICIES`` via the batched ``run_policies`` API; the
+same spec is lowered to closed-form counts and fed to ``predict`` with
+θ/λ fitted on the suite's own simulator points (the paper's per-hardware
+calibration).  The saved table reports, per scenario × policy: simulated
+cycles, hit rate, speedup over LRU, model-predicted cycles, and relative
+model error — plus the DBP-vs-LRU speedups the decode and MoE scenarios
+exist to demonstrate.
+
+Run a single scenario (CI smoke): ``python -m benchmarks.suite_bench
+--scenario decode-paged``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import fit_params, named_policy, predict, run_policies
+from repro.dataflows import (SUITE_POLICIES, build_suite, lower_to_counts,
+                             lower_to_trace, suite_case)
+
+from .common import Timer, emit, save
+
+
+def _sweep_case(case, table, fit_points):
+    trace = lower_to_trace(case.spec)
+    counts = lower_to_counts(case.spec)
+    results = run_policies(
+        trace, [named_policy(p, gqa=case.gqa) for p in SUITE_POLICIES],
+        case.cfg)
+    base = results[SUITE_POLICIES.index("lru")].cycles
+    for pol, res in zip(SUITE_POLICIES, results):
+        table[f"{case.key}-{pol}"] = {
+            "scenario": case.key,
+            "policy": pol,
+            "cycles": res.cycles,
+            "hit_rate": res.hit_rate,
+            "speedup_vs_lru": base / res.cycles,
+            "dead_evictions": res.dead_evictions,
+        }
+        fit_points.append((f"{case.key}-{pol}",
+                           (counts, case.cfg.llc_bytes, pol, "optimal",
+                            case.gqa, counts.n_rounds, res.cycles)))
+    return counts
+
+
+def _validate(cases, table, fit_points):
+    """Fit θ/λ on the suite's own points, then record per-row model
+    cycles and relative error (the §V-D calibration loop)."""
+    hw = cases[0].cfg
+    params = fit_params([p for _, p in fit_points], hw)
+    errs = {}
+    for row_key, (counts, llc, pol, variant, gqa, rounds, target) \
+            in fit_points:
+        pred = predict(counts, llc, pol, hw, params, variant, gqa,
+                       n_rounds=rounds).cycles
+        row = table[row_key]
+        row["model_cycles"] = pred
+        row["model_rel_err"] = abs(pred - target) / target
+        errs.setdefault(row["scenario"], []).append(row["model_rel_err"])
+    return {k: float(np.mean(v)) for k, v in errs.items()}, params
+
+
+def run(full: bool = False, scenario: str | None = None) -> dict:
+    table: dict = {}
+    fit_points: list = []
+    with Timer() as t:
+        if scenario is not None:
+            cases = [suite_case(scenario, full=full)]
+        else:
+            cases = build_suite(full=full)
+        for case in cases:
+            _sweep_case(case, table, fit_points)
+        errs, params = _validate(cases, table, fit_points)
+
+    parts = [f"model_err_mean={float(np.mean(list(errs.values()))):.3f}"]
+    for case in cases:
+        if case.expect_dbp_win:
+            dbp = table[f"{case.key}-at+dbp"]["speedup_vs_lru"]
+            parts.append(f"{case.key}_dbp_vs_lru={dbp:.2f}x")
+    emit("suite_bench", t.elapsed_us, ";".join(parts))
+    save("suite_bench", {
+        "rows": table,
+        "model_rel_err_by_scenario": errs,
+        "fitted_params": {
+            "theta1": params.theta1, "theta2": params.theta2,
+            "theta3": params.theta3, "lam": params.lam},
+    })
+    return table
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--scenario", default=None,
+                    help="run a single suite scenario (smoke mode)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(full=args.full, scenario=args.scenario)

@@ -12,7 +12,7 @@ from .tmu import TMU, DeadFIFO, TMUParams, TensorMeta
 from .traces import (CompiledTrace, DataflowCounts, Step, Trace,
                      build_fa2_trace, build_matmul_trace, fa2_counts)
 from .workloads import (PAPER_WORKLOADS, SPATIAL, TEMPORAL, AttnWorkload,
-                        get_workload)
+                        DecodeWorkload, MoEWorkload, get_workload)
 
 __all__ = [
     "ModelParams", "Prediction", "fit_params", "kendall_tau",
@@ -24,5 +24,6 @@ __all__ = [
     "TMU", "DeadFIFO", "TMUParams", "TensorMeta",
     "CompiledTrace", "DataflowCounts", "Step", "Trace", "build_fa2_trace",
     "build_matmul_trace", "fa2_counts",
-    "PAPER_WORKLOADS", "SPATIAL", "TEMPORAL", "AttnWorkload", "get_workload",
+    "PAPER_WORKLOADS", "SPATIAL", "TEMPORAL", "AttnWorkload",
+    "DecodeWorkload", "MoEWorkload", "get_workload",
 ]

@@ -82,6 +82,12 @@ class CacheOrchestrator:
             raise ValueError(f"tensor {meta.tensor_id} already registered")
         self._tensors[meta.tensor_id] = meta
 
+    def register_many(self, metas) -> None:
+        """Register a whole dataflow's tensors (e.g. the output of
+        ``repro.dataflows.tmu_metadata``) in one call."""
+        for meta in metas:
+            self.register(meta)
+
     def clear(self, tensor_id: int) -> None:
         self._tensors.pop(tensor_id, None)
 

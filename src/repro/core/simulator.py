@@ -130,8 +130,7 @@ class Simulator:
                   tile_entries=cfg.tmu_tile_entries,
                   dead_fifo_depth=cfg.dead_fifo_depth,
                   params=self.tmu_params)
-        for meta in trace.tensors.values():
-            tmu.register(meta)
+        tmu.register_many(trace.tensors.values())
         llc = SharedLLC(geom, self.policy, tmu=tmu)
         return geom, tmu, llc
 

@@ -198,6 +198,13 @@ class TMU:
             raise ValueError("tile size must be a multiple of the line size")
         self._tensors[meta.tensor_id] = meta
 
+    def register_many(self, metas) -> None:
+        """Register a whole dataflow's tensor set (one ``register`` per
+        entry, same capacity checks) — the batch form the simulator and
+        the dataflow lowerings use."""
+        for meta in metas:
+            self.register(meta)
+
     def clear(self, tensor_id: int) -> None:
         """Instruction 2: clear a registration that is no longer needed."""
         self._tensors.pop(tensor_id, None)

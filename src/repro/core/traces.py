@@ -1,12 +1,14 @@
 """Dataflow → memory-trace generation for the DCO simulator.
 
 The paper evaluates trace-driven: "directly using memory traces generated
-from given dataflows" (§VI-B).  We generate bulk-transfer traces for
-
-* FlashAttention-2 GQA with **temporal** or **spatial** group allocation
-  (paper §VI-C), optionally multi-batch (§VI-F DBP scenario), and
-* the tiled MatMul of Fig. 2(a) (used by the preliminary ICS'24 paper and
-  by our unit tests).
+from given dataflows" (§VI-B).  Traces are produced by lowering
+declarative dataflow specs (``repro.dataflows``, DESIGN.md §8); this
+module keeps the trace data model (:class:`Step`/:class:`Trace`), the
+compiled-trace IR, the closed-form :class:`DataflowCounts` record, and
+the historical entry points (``build_fa2_trace`` for FlashAttention-2 GQA
+with temporal/spatial group allocation §VI-C, optionally multi-batch
+§VI-F; ``build_matmul_trace`` for the tiled MatMul of Fig. 2(a)), which
+are now thin wrappers over the IR.
 
 A trace is a list of per-core *steps*; each step is one inner iteration of
 the dataflow: a set of bulk tile transfers plus the compute executed on
@@ -32,12 +34,12 @@ Python step lists.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from .tmu import TensorMeta
-from .workloads import SPATIAL, TEMPORAL, AttnWorkload
+from .workloads import AttnWorkload
 
 LINE_BYTES = 128
 
@@ -326,239 +328,25 @@ class CompiledTrace:
         return plans
 
 
-class _Allocator:
-    """Bump allocator, tile-aligned, beginning away from address 0 so tag
-    bits are non-degenerate."""
-
-    def __init__(self, base: int = 1 << 30):
-        self._next = base
-
-    def alloc(self, size: int, align: int) -> int:
-        a = (self._next + align - 1) // align * align
-        self._next = a + size
-        return a
-
-
 # ---------------------------------------------------------------------------
-# FlashAttention-2 GQA traces
+# Dataflow builders: thin wrappers over the declarative IR (DESIGN.md §8).
+# The hand-written builders these entry points used to contain live on as
+# IR spec builders in ``repro.dataflows``; tests/test_dataflow_ir.py pins
+# the lowered traces bit-identical to the pre-refactor implementations.
 # ---------------------------------------------------------------------------
 def build_fa2_trace(wl: AttnWorkload, n_cores: int = 16) -> Trace:
-    if wl.group_alloc == TEMPORAL:
-        return _fa2_temporal(wl, n_cores)
-    return _fa2_spatial(wl, n_cores)
+    """FlashAttention-2 GQA trace (temporal or spatial group allocation,
+    §VI-C; multi-batch for the §VI-F DBP scenario)."""
+    from repro.dataflows import fa2_spec, lower_to_trace
+    return lower_to_trace(fa2_spec(wl, n_cores))
 
 
-def _mk_kv_tensors(wl: AttnWorkload, alloc: _Allocator, tensors, next_id,
-                   batch: int, kv_head: int, n_acc: int):
-    """Create K and V tensors for one (batch, kv_head)."""
-    size = wl.seq_len * wl.head_dim * wl.dtype_bytes
-    ids = []
-    for _ in ("K", "V"):
-        base = alloc.alloc(size, wl.kv_tile_bytes)
-        tensors[next_id] = TensorMeta(
-            tensor_id=next_id, base_addr=base, size_bytes=size,
-            tile_bytes=wl.kv_tile_bytes, n_acc=n_acc, operand_id=1)
-        ids.append(next_id)
-        next_id += 1
-    return ids, next_id
-
-
-def _mk_qo_tensor(wl: AttnWorkload, alloc: _Allocator, tensors, next_id,
-                  operand_id: int):
-    size = wl.seq_len * wl.head_dim * wl.dtype_bytes
-    base = alloc.alloc(size, wl.q_tile_bytes)
-    tensors[next_id] = TensorMeta(
-        tensor_id=next_id, base_addr=base, size_bytes=size,
-        tile_bytes=wl.q_tile_bytes, n_acc=1, operand_id=operand_id,
-        bypass_all=True)   # paper §V-C: Q and O always bypass the LLC
-    return next_id, next_id + 1
-
-
-def _fa2_temporal(wl: AttnWorkload, n_cores: int) -> Trace:
-    """Group dimension entirely in the time domain: each KV-head group is
-    owned by exactly one core; the core loads a KV tile once per Q tile and
-    reuses it for all Q heads of the group from its SPM.
-
-    A core with several assigned groups interleaves them at Q-tile
-    granularity (the natural schedule when Q/O tiles of all live heads fit
-    the SPM), so *every* assigned group's K/V stream is live concurrently —
-    this is what makes the long-reuse-distance thrashing regime of the
-    paper appear.  Batches stay strictly sequential so the multi-batch DBP
-    scenario (§VI-F) sees batch-0 data die while batch-1 runs."""
-    alloc = _Allocator()
-    tensors: Dict[int, TensorMeta] = {}
-    next_id = 0
-    steps: List[List[Step]] = [[] for _ in range(n_cores)]
-
-    # nAcc: each K/V line is touched once per Q-tile pass by its owner core.
-    n_acc = wl.n_q_tiles
-    # static round-robin over cores, per batch
-    per_core: List[List[Tuple[int, int]]] = [[] for _ in range(n_cores)]
-    for b in range(wl.n_batches):
-        for g in range(wl.n_kv_heads):
-            per_core[g % n_cores].append((b, g))
-
-    for c in range(n_cores):
-        items = []
-        for (b, g) in per_core[c]:
-            kv_ids, next_id = _mk_kv_tensors(wl, alloc, tensors, next_id,
-                                             b, g, n_acc)
-            q_ids, o_ids = [], []
-            for _ in range(wl.group_size):
-                qid, next_id = _mk_qo_tensor(wl, alloc, tensors, next_id, 0)
-                oid, next_id = _mk_qo_tensor(wl, alloc, tensors, next_id, 2)
-                q_ids.append(qid)
-                o_ids.append(oid)
-            items.append((b, kv_ids, q_ids, o_ids))
-
-        half = wl.flops_per_inner_step() * wl.group_size / 2
-        for b in range(wl.n_batches):
-            batch_items = [it for it in items if it[0] == b]
-            for i in range(wl.n_q_tiles):
-                for (_, kv_ids, q_ids, o_ids) in batch_items:
-                    steps[c].append(Step(
-                        loads=[(qid, i) for qid in q_ids], flops=0.0))
-                    kv_hi = _kv_extent(wl, i)
-                    for j in range(kv_hi):
-                        # FA2 inner iteration: load K tile → QK^T, then
-                        # load V tile → PV (two transfers, two computes)
-                        steps[c].append(Step(loads=[(kv_ids[0], j)],
-                                             flops=half))
-                        steps[c].append(Step(loads=[(kv_ids[1], j)],
-                                             flops=half))
-                    steps[c].append(Step(
-                        stores=[(oid, i) for oid in o_ids], flops=0.0))
-
-    return Trace(name=f"{wl.name}-temporal", tensors=tensors,
-                 core_steps=steps, core_group=[-1] * n_cores,
-                 core_is_leader=[True] * n_cores, workload=wl)
-
-
-def _fa2_spatial(wl: AttnWorkload, n_cores: int) -> Trace:
-    """Group dimension (partially) across cores: Q heads of one group run
-    on different cores in the same wave and stream the same K/V tensors.
-
-    Group members run in lockstep (their same-round requests merge in the
-    MSHRs, policy-independently — paper §V-C) except the **last rank of
-    each group, which lags one round**: its reuses are carried by LLC
-    *storage*, exactly the population that blind bypassing destroys
-    (§IV-E).  The lagging core commits fewer instructions and is the
-    "slower core" that the gqa_bypass variant allows to bypass."""
-    alloc = _Allocator()
-    tensors: Dict[int, TensorMeta] = {}
-    next_id = 0
-    steps: List[List[Step]] = [[] for _ in range(n_cores)]
-    gs = wl.group_size
-
-    # Each K/V line is touched by every group member once per Q-tile pass.
-    n_acc = wl.n_q_tiles * min(gs, n_cores)
-
-    # wave layout: q head h runs on core h % n_cores during wave h // n_cores
-    n_waves = (wl.n_q_heads + n_cores - 1) // n_cores
-    kv_cache_ids: Dict[Tuple[int, int], List[int]] = {}
-    core_group = [c // gs if gs <= n_cores else 0 for c in range(n_cores)]
-    # the lagging (slower) core is the last rank of each group
-    core_is_leader = [(c % gs != gs - 1) if gs <= n_cores
-                      else (c != n_cores - 1) for c in range(n_cores)]
-
-    for b in range(wl.n_batches):
-        for g in range(wl.n_kv_heads):
-            kv_cache_ids[(b, g)], next_id = _mk_kv_tensors(
-                wl, alloc, tensors, next_id, b, g, n_acc)
-
-    qo_ids: Dict[Tuple[int, int], Tuple[int, int]] = {}
-    for b in range(wl.n_batches):
-        for h in range(wl.n_q_heads):
-            qid, next_id = _mk_qo_tensor(wl, alloc, tensors, next_id, 0)
-            oid, next_id = _mk_qo_tensor(wl, alloc, tensors, next_id, 2)
-            qo_ids[(b, h)] = (qid, oid)
-
-    half = wl.flops_per_inner_step() / 2
-    # Wave slots are interleaved at Q-tile granularity: every assigned
-    # head (and hence every KV group) stays live through the run, so the
-    # streaming reuse distance is the full multi-group working set.
-    for b in range(wl.n_batches):
-        for i in range(wl.n_q_tiles):
-            kv_hi = _kv_extent(wl, i)
-            for w in range(n_waves):
-                for c in range(n_cores):
-                    h = w * n_cores + c
-                    if h >= wl.n_q_heads:
-                        # idle core this wave slot: pad to stay in lockstep
-                        steps[c].extend(Step() for _ in range(2 * kv_hi + 2))
-                        continue
-                    g = h // gs
-                    kv_ids = kv_cache_ids[(b, g)]
-                    qid, oid = qo_ids[(b, h)]
-                    rank = (h % gs) if gs <= n_cores else c
-                    last_rank = (gs - 1) if gs <= n_cores else (n_cores - 1)
-                    lag = 1 if rank == last_rank else 0
-                    steps[c].append(Step(loads=[(qid, i)], flops=0.0))
-                    for jj in range(kv_hi):
-                        j = (jj - lag) % kv_hi
-                        steps[c].append(Step(loads=[(kv_ids[0], j)],
-                                             flops=half))
-                        steps[c].append(Step(loads=[(kv_ids[1], j)],
-                                             flops=half))
-                    steps[c].append(Step(stores=[(oid, i)], flops=0.0))
-
-    return Trace(name=f"{wl.name}-spatial", tensors=tensors,
-                 core_steps=steps, core_group=core_group,
-                 core_is_leader=core_is_leader, workload=wl)
-
-
-def _kv_extent(wl: AttnWorkload, q_tile: int) -> int:
-    if not wl.causal:
-        return wl.n_kv_tiles
-    return min(q_tile + 1, wl.n_kv_tiles)
-
-
-# ---------------------------------------------------------------------------
-# Tiled MatMul trace (paper Fig. 2a)
-# ---------------------------------------------------------------------------
 def build_matmul_trace(m: int, n: int, k: int, tile: int = 128,
                        n_cores: int = 16, dtype_bytes: int = 1) -> Trace:
-    """C[M,N] = A[M,K] @ B[K,N], tiles distributed over cores by C-tile.
-
-    nAcc per Fig. 2(a): every A tile is read once per N-tile column it
-    contributes to *on this core's schedule*; with C-tiles distributed
-    round-robin the per-line expectation is n/tile (A) and m/tile (B)
-    divided by the core grid — we register the *global* expectation as the
-    paper does (dataflow-level, not schedule-level).
-    """
-    if m % tile or n % tile or k % tile:
-        raise ValueError("dims must be tile-aligned")
-    mt, nt, kt = m // tile, n // tile, k // tile
-    tile_bytes = tile * tile * dtype_bytes
-    alloc = _Allocator()
-    tensors: Dict[int, TensorMeta] = {}
-
-    def mk(tid, rows_t, cols_t, n_acc, operand_id, bypass=False):
-        size = rows_t * cols_t * tile_bytes
-        base = alloc.alloc(size, tile_bytes)
-        tensors[tid] = TensorMeta(tensor_id=tid, base_addr=base,
-                                  size_bytes=size, tile_bytes=tile_bytes,
-                                  n_acc=n_acc, operand_id=operand_id,
-                                  bypass_all=bypass)
-
-    A, B, C = 0, 1, 2
-    mk(A, mt, kt, n_acc=nt, operand_id=0)
-    mk(B, kt, nt, n_acc=mt, operand_id=1)
-    mk(C, mt, nt, n_acc=1, operand_id=2, bypass=True)
-
-    steps: List[List[Step]] = [[] for _ in range(n_cores)]
-    flops = 2.0 * tile * tile * tile
-    c_tiles = [(i, j) for i in range(mt) for j in range(nt)]
-    for idx, (i, j) in enumerate(c_tiles):
-        core = idx % n_cores
-        for kk in range(kt):
-            steps[core].append(Step(
-                loads=[(A, i * kt + kk), (B, kk * nt + j)], flops=flops))
-        steps[core].append(Step(stores=[(C, i * nt + j)]))
-
-    return Trace(name=f"matmul-{m}x{n}x{k}", tensors=tensors,
-                 core_steps=steps, core_group=[-1] * n_cores,
-                 core_is_leader=[True] * n_cores)
+    """Tiled MatMul trace of Fig. 2(a), C-tiles round-robin over cores."""
+    from repro.dataflows import lower_to_trace, matmul_spec
+    return lower_to_trace(matmul_spec(m, n, k, tile=tile, n_cores=n_cores,
+                                      dtype_bytes=dtype_bytes))
 
 
 # ---------------------------------------------------------------------------
@@ -588,47 +376,8 @@ class DataflowCounts:
 
 
 def fa2_counts(wl: AttnWorkload, n_cores: int = 16) -> DataflowCounts:
-    kv_lines_head = 2 * wl.seq_len * wl.head_dim * wl.dtype_bytes // LINE_BYTES
-    kv_distinct = kv_lines_head * wl.n_kv_heads * wl.n_batches
-    gs = wl.group_size
-
-    if wl.causal:
-        # average q tile touches (i+1)/n_kv_tiles of the K/V stream
-        pass_frac = (wl.n_q_tiles + 1) / (2 * wl.n_q_tiles)
-    else:
-        pass_frac = 1.0
-
-    # head interleaving keeps every KV group of a batch live concurrently
-    active_groups = wl.n_kv_heads
-    if wl.group_alloc == TEMPORAL:
-        # owner core loads each KV tile once per q tile
-        accesses = kv_distinct * wl.n_q_tiles * pass_frac
-        intercore = 0
-        items_per_core = -(-wl.n_kv_heads * wl.n_batches // n_cores)
-        n_rounds = items_per_core * wl.n_q_tiles * (2 * wl.n_kv_tiles + 2)
-    else:
-        accesses = kv_distinct * wl.n_q_tiles * min(gs, n_cores) * pass_frac
-        # each fetched tile is re-requested by (group members - 1) cores
-        intercore = accesses * (min(gs, n_cores) - 1) / min(gs, n_cores)
-        n_waves = -(-wl.n_q_heads // n_cores)
-        n_rounds = (wl.n_batches * n_waves * wl.n_q_tiles
-                    * (2 * wl.n_kv_tiles + 2))
-
-    s_active = active_groups * 2 * wl.seq_len * wl.head_dim * wl.dtype_bytes
-    qo_lines = (2 * wl.seq_len * wl.head_dim * wl.dtype_bytes // LINE_BYTES
-                ) * wl.n_q_heads * wl.n_batches
-    flops = (wl.flops_per_inner_step() * wl.n_q_tiles * wl.n_kv_tiles
-             * pass_frac * wl.n_q_heads * wl.n_batches)
-
-    return DataflowCounts(
-        name=f"{wl.name}-{wl.group_alloc}", line_bytes=LINE_BYTES,
-        n_kv_accesses=int(round(accesses)),
-        n_kv_distinct=int(kv_distinct),
-        n_bypass_lines=int(qo_lines),
-        n_intercore_reuse=int(round(intercore)),
-        s_work_active=int(s_active),
-        s_work_total=int(kv_distinct * LINE_BYTES // max(wl.n_batches, 1)),
-        flops_total=float(flops),
-        n_batches=wl.n_batches,
-        n_rounds=int(n_rounds),
-    )
+    """Closed-form FA2 request counts, derived from the same IR spec the
+    trace is lowered from (pinned bit-identical to the former hand-kept
+    formula by tests/test_dataflow_ir.py)."""
+    from repro.dataflows import fa2_spec, lower_to_counts
+    return lower_to_counts(fa2_spec(wl, n_cores))

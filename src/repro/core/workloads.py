@@ -89,6 +89,105 @@ class AttnWorkload:
         return replace(self, n_batches=n)
 
 
+@dataclass(frozen=True)
+class DecodeWorkload:
+    """Decode-time attention over paged KV (the §VI-F multi-batch scenario
+    generalized to serving): every decode step streams the full live KV
+    history of each sequence; sequences finish at different steps, so
+    their pages become dead mid-run and pollute the LLC until retired.
+
+    ``n_short`` of the ``n_seqs`` sequences end after ``retire_step``
+    decode steps; the rest run all ``n_steps``.  Each K/V line is read
+    once per decode step its sequence is alive, so ``nAcc`` equals the
+    sequence's lifetime in steps — the dataflow knowledge DBP retires
+    pages with.
+    """
+
+    name: str = "decode-paged"
+    n_seqs: int = 16
+    seq_len: int = 2048               # KV history rows per sequence
+    head_dim: int = 128
+    n_kv_heads: int = 1
+    page_rows: int = 128
+    dtype_bytes: int = 1
+    n_steps: int = 8                  # decode steps simulated
+    retire_step: int = 4              # short sequences end after this step
+    n_short: int = 8
+
+    def __post_init__(self) -> None:
+        if self.seq_len % self.page_rows:
+            raise ValueError("seq_len must be page-aligned")
+        if not (0 < self.retire_step <= self.n_steps):
+            raise ValueError("retire_step must lie in (0, n_steps]")
+        if not (0 <= self.n_short <= self.n_seqs):
+            raise ValueError("n_short out of range")
+
+    @property
+    def page_bytes(self) -> int:
+        return (self.page_rows * self.head_dim * self.n_kv_heads
+                * self.dtype_bytes)
+
+    @property
+    def n_pages(self) -> int:
+        return self.seq_len // self.page_rows
+
+    @property
+    def kv_bytes_per_seq(self) -> int:
+        """K + V bytes of one sequence's history."""
+        return 2 * self.n_pages * self.page_bytes
+
+    def steps_alive(self, seq: int) -> int:
+        return self.retire_step if seq < self.n_short else self.n_steps
+
+
+@dataclass(frozen=True)
+class MoEWorkload:
+    """Expert-FFN of a Mixture-of-Experts layer with skewed routing:
+    ``n_hot`` experts stay active for the whole run and are co-streamed by
+    several cores (inter-core expert-weight sharing through the LLC),
+    while the remaining cold experts serve traffic only during the first
+    ``warm_steps`` token waves and then retire — dead expert weights that
+    pollute the cache exactly like finished batches do in §VI-F.
+    """
+
+    name: str = "moe-ffn"
+    n_experts: int = 16
+    n_hot: int = 8
+    d_model: int = 512
+    d_ff: int = 512
+    tile_bytes: int = 16 * 1024
+    token_block: int = 32             # tokens per routed activation tile
+    dtype_bytes: int = 1
+    n_steps: int = 8                  # token waves
+    warm_steps: int = 2               # waves during which cold experts route
+
+    def __post_init__(self) -> None:
+        if not (0 < self.n_hot <= self.n_experts):
+            raise ValueError("n_hot out of range")
+        if self.expert_bytes % self.tile_bytes:
+            raise ValueError("expert weights must be tile-aligned")
+        if not (0 < self.warm_steps <= self.n_steps):
+            raise ValueError("warm_steps must lie in (0, n_steps]")
+
+    @property
+    def expert_bytes(self) -> int:
+        """W_up + W_down bytes of one expert."""
+        return 2 * self.d_model * self.d_ff * self.dtype_bytes
+
+    @property
+    def n_cold(self) -> int:
+        return self.n_experts - self.n_hot
+
+    @property
+    def act_tile_bytes(self) -> int:
+        return self.token_block * self.d_model * self.dtype_bytes
+
+    @property
+    def flops_per_use(self) -> float:
+        """One routed token block through W_up and W_down."""
+        return 4.0 * self.token_block * self.d_model * self.d_ff
+
+
 # Paper benchmark models (attention-unit shapes; GQA head counts are the
 # models' published configurations, head_dim 128 across all four).
 PAPER_WORKLOADS: Dict[str, AttnWorkload] = {

@@ -1,0 +1,26 @@
+"""Declarative dataflow IR with shared lowerings (DESIGN.md §8).
+
+One :class:`DataflowSpec` per scenario; ``lower_to_trace`` /
+``lower_to_counts`` / ``lower_to_plan`` derive the simulator trace, the
+analytical model's counts, and the orchestrator plan from that single
+description.  The scenario registry (``build_suite``) is the canonical
+entry point for sweeping every expressible dataflow.
+"""
+
+from .fa2 import fa2_spec, matmul_spec
+from .ir import DataflowSpec, SpecBuilder, StepSpec, TensorSpec
+from .lower import (assign_addresses, lower_to_counts, lower_to_plan,
+                    lower_to_trace, tmu_metadata)
+from .scenarios import (decode_paged_spec, mlp_chain_spec, moe_ffn_spec,
+                        transformer_layer_spec)
+from .suite import SUITE_POLICIES, SuiteCase, build_suite, suite_case
+
+__all__ = [
+    "DataflowSpec", "SpecBuilder", "StepSpec", "TensorSpec",
+    "assign_addresses", "lower_to_counts", "lower_to_plan",
+    "lower_to_trace", "tmu_metadata",
+    "fa2_spec", "matmul_spec",
+    "decode_paged_spec", "mlp_chain_spec", "moe_ffn_spec",
+    "transformer_layer_spec",
+    "SUITE_POLICIES", "SuiteCase", "build_suite", "suite_case",
+]

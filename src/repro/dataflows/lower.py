@@ -1,0 +1,145 @@
+"""Lowerings from the dataflow IR to the three backends (DESIGN.md §8.2).
+
+All three consumers of dataflow knowledge — the trace-driven simulator,
+the cache-integrated analytical model (§V), and the TPU-side orchestrator
+— derive their inputs here from one :class:`~repro.dataflows.ir.DataflowSpec`.
+Address assignment is shared: every lowering sees the same bump-allocated
+layout (tile-aligned, declaration order), so the simulator's TMU metadata,
+the model's line counts, and the orchestrator's plan all describe the same
+physical tensors.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.orchestrator import CacheOrchestrator, OrchestrationPlan
+from repro.core.tmu import TensorMeta
+from repro.core.traces import DataflowCounts, Step, Trace
+
+from .ir import DataflowSpec
+
+
+class _Allocator:
+    """Bump allocator, tile-aligned, beginning away from address 0 so tag
+    bits are non-degenerate."""
+
+    def __init__(self, base: int = 1 << 30):
+        self._next = base
+
+    def alloc(self, size: int, align: int) -> int:
+        a = (self._next + align - 1) // align * align
+        self._next = a + size
+        return a
+
+
+def assign_addresses(spec: DataflowSpec) -> Dict[int, TensorMeta]:
+    """Lay the spec's tensors out in physical address space.
+
+    Declaration order is allocation order and the tensor id is the
+    declaration index — the single source of truth for the layout every
+    lowering (and the TMU) observes.
+    """
+    alloc = _Allocator()
+    metas: Dict[int, TensorMeta] = {}
+    for tid, t in enumerate(spec.tensors):
+        base = alloc.alloc(t.size_bytes, t.tile_bytes)
+        metas[tid] = TensorMeta(
+            tensor_id=tid, base_addr=base, size_bytes=t.size_bytes,
+            tile_bytes=t.tile_bytes, n_acc=t.n_acc,
+            operand_id=t.operand_id, bypass_all=t.bypass)
+    return metas
+
+
+def tmu_metadata(spec: DataflowSpec) -> List[TensorMeta]:
+    """The spec's tensors as TMU registration records (paper §IV-B)."""
+    return list(assign_addresses(spec).values())
+
+
+# ---------------------------------------------------------------------------
+def lower_to_trace(spec: DataflowSpec) -> Trace:
+    """Expand the spec's round schedule into a simulator :class:`Trace`."""
+    metas = assign_addresses(spec)
+    tid_of = {t.name: i for i, t in enumerate(spec.tensors)}
+    core_steps: List[List[Step]] = []
+    for prog in spec.core_programs:
+        steps: List[Step] = []
+        for s in prog:
+            steps.append(Step(
+                loads=[(tid_of[n], tile) for n, tile in s.loads],
+                stores=[(tid_of[n], tile) for n, tile in s.stores],
+                flops=s.flops))
+        core_steps.append(steps)
+    return Trace(name=spec.name, tensors=metas, core_steps=core_steps,
+                 core_group=list(spec.core_group),
+                 core_is_leader=list(spec.core_is_leader),
+                 line_bytes=spec.line_bytes, workload=spec.workload)
+
+
+# ---------------------------------------------------------------------------
+def lower_to_counts(spec: DataflowSpec) -> DataflowCounts:
+    """Derive the analytical model's request counts (§V, Eq. 1–3) from the
+    spec — closed-form per tensor (tile transfer counts × lines per tile,
+    placement annotations for sharing), no trace expansion and no
+    addresses.
+
+    Class assignment follows §V-B/§V-C: non-bypass tensors are the
+    reuse-carrier (K/V) class — their first line touches are cold misses
+    and repeat touches split into temporal and inter-core reuse via the
+    declared ``sharers`` — while ``bypass`` tensors are the bursty
+    always-DRAM (Q/O) class.
+    """
+    per_tensor = spec.per_tensor_line_accesses()
+    n_kv_accesses = 0.0
+    n_kv_distinct = 0
+    n_bypass = 0
+    intercore = 0.0
+    for t in spec.tensors:
+        reads, writes = per_tensor[t.name]
+        acc = reads + writes
+        if t.bypass:
+            n_bypass += acc
+            continue
+        n_kv_accesses += acc
+        n_kv_distinct += t.size_bytes // spec.line_bytes
+        if t.sharers > 1:
+            intercore += acc * (t.sharers - 1) / t.sharers
+
+    live_bytes = [0] * spec.n_epochs
+    for t in spec.tensors:
+        if t.bypass:
+            continue
+        for e in range(t.epoch0, t.epoch1 + 1):
+            live_bytes[e] += t.size_bytes
+    s_active = max(live_bytes) if live_bytes else 0
+    s_total = live_bytes[0] if live_bytes else 0
+
+    return DataflowCounts(
+        name=spec.name, line_bytes=spec.line_bytes,
+        n_kv_accesses=int(round(n_kv_accesses)),
+        n_kv_distinct=int(n_kv_distinct),
+        n_bypass_lines=int(n_bypass),
+        n_intercore_reuse=int(round(intercore)),
+        s_work_active=int(s_active),
+        s_work_total=int(s_total),
+        flops_total=float(spec.total_flops()),
+        n_batches=spec.n_epochs,
+        n_rounds=int(spec.n_rounds),
+    )
+
+
+# ---------------------------------------------------------------------------
+def lower_to_plan(spec: DataflowSpec, vmem_budget_bytes: int, *,
+                  b_bits: int = 3,
+                  reserve_fraction: float = 1.0 / 8.0) -> OrchestrationPlan:
+    """Plan VMEM residency for the spec's tensors (DESIGN.md §3).
+
+    Registers the shared address layout with a
+    :class:`~repro.core.orchestrator.CacheOrchestrator` and runs the
+    S_kept planner — the compile-time transfer of the paper's
+    anti-thrashing + bypass gear selection.
+    """
+    orch = CacheOrchestrator(vmem_budget_bytes, b_bits=b_bits,
+                             reserve_fraction=reserve_fraction)
+    orch.register_many(tmu_metadata(spec))
+    return orch.plan()

@@ -1,0 +1,101 @@
+"""The scenario suite: every dataflow the stack can express, one registry.
+
+Each :class:`SuiteCase` bundles a spec builder with the cache
+configuration that puts it in the regime the paper studies (working set
+vs. LLC capacity) and the policy-variant flag (gqa bypass for spatially
+shared dataflows, §IV-E).  ``benchmarks/suite_bench.py`` sweeps the fig-4
+policy set across this registry and cross-validates the simulator against
+the analytical model; tests and future scenario PRs extend the registry
+rather than writing new one-off builders.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+from repro.core.simulator import SimConfig
+from repro.core.workloads import (AttnWorkload, DecodeWorkload, MoEWorkload,
+                                  get_workload)
+
+from .fa2 import fa2_spec, matmul_spec
+from .ir import DataflowSpec
+from .scenarios import (decode_paged_spec, mlp_chain_spec, moe_ffn_spec,
+                        transformer_layer_spec)
+
+MB = 2 ** 20
+
+#: the fig-4 policy set plus the DBP-bearing variants the new scenarios
+#: exercise (fig-8 style)
+SUITE_POLICIES: Tuple[str, ...] = ("lru", "at", "at+bypass", "at+dbp",
+                                   "all")
+
+
+@dataclass
+class SuiteCase:
+    key: str
+    spec: DataflowSpec
+    cfg: SimConfig
+    gqa: bool = False
+    #: scenarios where dead-block prediction must beat plain LRU
+    expect_dbp_win: bool = False
+
+
+def build_suite(full: bool = False, n_cores: int = 16) -> List[SuiteCase]:
+    """Instantiate the whole suite (reduced grid by default, paper-scale
+    shapes with ``full=True``)."""
+    seq = 2048 if full else 1024
+    cases: List[SuiteCase] = []
+
+    # LLC sizes put each case in the paper's contended regime (working
+    # set a small multiple of capacity) at the default reduced shapes
+    wl_t = get_workload("gemma3-27b", seq_len=seq)
+    cases.append(SuiteCase(
+        "fa2-temporal", fa2_spec(wl_t, n_cores),
+        SimConfig(n_cores=n_cores, llc_bytes=(4 if full else 2) * MB)))
+
+    wl_s = get_workload("qwen3-8b", seq_len=seq)
+    cases.append(SuiteCase(
+        "fa2-spatial", fa2_spec(wl_s, n_cores),
+        SimConfig(n_cores=n_cores, llc_bytes=(2 if full else 1) * MB),
+        gqa=True))
+
+    dim = 2048 if full else 1024
+    cases.append(SuiteCase(
+        "matmul", matmul_spec(dim, dim, dim, tile=128, n_cores=n_cores),
+        SimConfig(n_cores=n_cores, llc_bytes=1 * MB)))
+
+    dec = DecodeWorkload(seq_len=4096 if full else 2048)
+    cases.append(SuiteCase(
+        "decode-paged", decode_paged_spec(dec, n_cores),
+        SimConfig(n_cores=n_cores, llc_bytes=4 * MB),
+        expect_dbp_win=True))
+
+    moe = MoEWorkload(n_steps=12 if full else 8)
+    cases.append(SuiteCase(
+        "moe-ffn", moe_ffn_spec(moe, n_cores),
+        SimConfig(n_cores=n_cores, llc_bytes=2 * MB),
+        expect_dbp_win=True))
+
+    cases.append(SuiteCase(
+        "mlp-chain",
+        mlp_chain_spec(m=2048 if full else 1024, n_cores=n_cores),
+        SimConfig(n_cores=n_cores, llc_bytes=1 * MB)))
+
+    wl_l = AttnWorkload("tl-8h", n_q_heads=8, n_kv_heads=4, head_dim=128,
+                        seq_len=seq, group_alloc="temporal")
+    cases.append(SuiteCase(
+        "transformer-layer", transformer_layer_spec(wl_l, d_ff=1024,
+                                                    n_cores=n_cores),
+        SimConfig(n_cores=n_cores, llc_bytes=2 * MB)))
+    return cases
+
+
+def suite_case(key: str, full: bool = False,
+               n_cores: int = 16) -> SuiteCase:
+    cases = build_suite(full=full, n_cores=n_cores)
+    for case in cases:
+        if case.key == key:
+            return case
+    raise KeyError(f"unknown suite scenario {key!r}; have "
+                   f"{[c.key for c in cases]}")

@@ -1,0 +1,246 @@
+"""Frozen pre-refactor trace builders and closed-form counts (PR-1 state).
+
+This is a verbatim copy of the hand-written ``build_fa2_trace`` /
+``build_matmul_trace`` / ``fa2_counts`` implementations as they existed
+before the dataflow IR landed.  It exists ONLY as the reference oracle for
+``tests/test_dataflow_ir.py``: the IR-based re-expressions must reproduce
+these outputs bit-identically (tensor metadata, step schedules, simulator
+counters, and counts).  Do not "fix" or modernize this file — divergence
+from it is the signal the equivalence tests exist to catch.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.core.tmu import TensorMeta
+from repro.core.traces import LINE_BYTES, DataflowCounts, Step, Trace
+from repro.core.workloads import TEMPORAL, AttnWorkload
+
+
+class _Allocator:
+    def __init__(self, base: int = 1 << 30):
+        self._next = base
+
+    def alloc(self, size: int, align: int) -> int:
+        a = (self._next + align - 1) // align * align
+        self._next = a + size
+        return a
+
+
+def build_fa2_trace_ref(wl: AttnWorkload, n_cores: int = 16) -> Trace:
+    if wl.group_alloc == TEMPORAL:
+        return _fa2_temporal(wl, n_cores)
+    return _fa2_spatial(wl, n_cores)
+
+
+def _mk_kv_tensors(wl, alloc, tensors, next_id, batch, kv_head, n_acc):
+    size = wl.seq_len * wl.head_dim * wl.dtype_bytes
+    ids = []
+    for _ in ("K", "V"):
+        base = alloc.alloc(size, wl.kv_tile_bytes)
+        tensors[next_id] = TensorMeta(
+            tensor_id=next_id, base_addr=base, size_bytes=size,
+            tile_bytes=wl.kv_tile_bytes, n_acc=n_acc, operand_id=1)
+        ids.append(next_id)
+        next_id += 1
+    return ids, next_id
+
+
+def _mk_qo_tensor(wl, alloc, tensors, next_id, operand_id):
+    size = wl.seq_len * wl.head_dim * wl.dtype_bytes
+    base = alloc.alloc(size, wl.q_tile_bytes)
+    tensors[next_id] = TensorMeta(
+        tensor_id=next_id, base_addr=base, size_bytes=size,
+        tile_bytes=wl.q_tile_bytes, n_acc=1, operand_id=operand_id,
+        bypass_all=True)
+    return next_id, next_id + 1
+
+
+def _fa2_temporal(wl: AttnWorkload, n_cores: int) -> Trace:
+    alloc = _Allocator()
+    tensors: Dict[int, TensorMeta] = {}
+    next_id = 0
+    steps: List[List[Step]] = [[] for _ in range(n_cores)]
+
+    n_acc = wl.n_q_tiles
+    per_core: List[List[Tuple[int, int]]] = [[] for _ in range(n_cores)]
+    for b in range(wl.n_batches):
+        for g in range(wl.n_kv_heads):
+            per_core[g % n_cores].append((b, g))
+
+    for c in range(n_cores):
+        items = []
+        for (b, g) in per_core[c]:
+            kv_ids, next_id = _mk_kv_tensors(wl, alloc, tensors, next_id,
+                                             b, g, n_acc)
+            q_ids, o_ids = [], []
+            for _ in range(wl.group_size):
+                qid, next_id = _mk_qo_tensor(wl, alloc, tensors, next_id, 0)
+                oid, next_id = _mk_qo_tensor(wl, alloc, tensors, next_id, 2)
+                q_ids.append(qid)
+                o_ids.append(oid)
+            items.append((b, kv_ids, q_ids, o_ids))
+
+        half = wl.flops_per_inner_step() * wl.group_size / 2
+        for b in range(wl.n_batches):
+            batch_items = [it for it in items if it[0] == b]
+            for i in range(wl.n_q_tiles):
+                for (_, kv_ids, q_ids, o_ids) in batch_items:
+                    steps[c].append(Step(
+                        loads=[(qid, i) for qid in q_ids], flops=0.0))
+                    kv_hi = _kv_extent(wl, i)
+                    for j in range(kv_hi):
+                        steps[c].append(Step(loads=[(kv_ids[0], j)],
+                                             flops=half))
+                        steps[c].append(Step(loads=[(kv_ids[1], j)],
+                                             flops=half))
+                    steps[c].append(Step(
+                        stores=[(oid, i) for oid in o_ids], flops=0.0))
+
+    return Trace(name=f"{wl.name}-temporal", tensors=tensors,
+                 core_steps=steps, core_group=[-1] * n_cores,
+                 core_is_leader=[True] * n_cores, workload=wl)
+
+
+def _fa2_spatial(wl: AttnWorkload, n_cores: int) -> Trace:
+    alloc = _Allocator()
+    tensors: Dict[int, TensorMeta] = {}
+    next_id = 0
+    steps: List[List[Step]] = [[] for _ in range(n_cores)]
+    gs = wl.group_size
+
+    n_acc = wl.n_q_tiles * min(gs, n_cores)
+
+    n_waves = (wl.n_q_heads + n_cores - 1) // n_cores
+    kv_cache_ids: Dict[Tuple[int, int], List[int]] = {}
+    core_group = [c // gs if gs <= n_cores else 0 for c in range(n_cores)]
+    core_is_leader = [(c % gs != gs - 1) if gs <= n_cores
+                      else (c != n_cores - 1) for c in range(n_cores)]
+
+    for b in range(wl.n_batches):
+        for g in range(wl.n_kv_heads):
+            kv_cache_ids[(b, g)], next_id = _mk_kv_tensors(
+                wl, alloc, tensors, next_id, b, g, n_acc)
+
+    qo_ids: Dict[Tuple[int, int], Tuple[int, int]] = {}
+    for b in range(wl.n_batches):
+        for h in range(wl.n_q_heads):
+            qid, next_id = _mk_qo_tensor(wl, alloc, tensors, next_id, 0)
+            oid, next_id = _mk_qo_tensor(wl, alloc, tensors, next_id, 2)
+            qo_ids[(b, h)] = (qid, oid)
+
+    half = wl.flops_per_inner_step() / 2
+    for b in range(wl.n_batches):
+        for i in range(wl.n_q_tiles):
+            kv_hi = _kv_extent(wl, i)
+            for w in range(n_waves):
+                for c in range(n_cores):
+                    h = w * n_cores + c
+                    if h >= wl.n_q_heads:
+                        steps[c].extend(Step() for _ in range(2 * kv_hi + 2))
+                        continue
+                    g = h // gs
+                    kv_ids = kv_cache_ids[(b, g)]
+                    qid, oid = qo_ids[(b, h)]
+                    rank = (h % gs) if gs <= n_cores else c
+                    last_rank = (gs - 1) if gs <= n_cores else (n_cores - 1)
+                    lag = 1 if rank == last_rank else 0
+                    steps[c].append(Step(loads=[(qid, i)], flops=0.0))
+                    for jj in range(kv_hi):
+                        j = (jj - lag) % kv_hi
+                        steps[c].append(Step(loads=[(kv_ids[0], j)],
+                                             flops=half))
+                        steps[c].append(Step(loads=[(kv_ids[1], j)],
+                                             flops=half))
+                    steps[c].append(Step(stores=[(oid, i)], flops=0.0))
+
+    return Trace(name=f"{wl.name}-spatial", tensors=tensors,
+                 core_steps=steps, core_group=core_group,
+                 core_is_leader=core_is_leader, workload=wl)
+
+
+def _kv_extent(wl: AttnWorkload, q_tile: int) -> int:
+    if not wl.causal:
+        return wl.n_kv_tiles
+    return min(q_tile + 1, wl.n_kv_tiles)
+
+
+def build_matmul_trace_ref(m: int, n: int, k: int, tile: int = 128,
+                           n_cores: int = 16, dtype_bytes: int = 1) -> Trace:
+    if m % tile or n % tile or k % tile:
+        raise ValueError("dims must be tile-aligned")
+    mt, nt, kt = m // tile, n // tile, k // tile
+    tile_bytes = tile * tile * dtype_bytes
+    alloc = _Allocator()
+    tensors: Dict[int, TensorMeta] = {}
+
+    def mk(tid, rows_t, cols_t, n_acc, operand_id, bypass=False):
+        size = rows_t * cols_t * tile_bytes
+        base = alloc.alloc(size, tile_bytes)
+        tensors[tid] = TensorMeta(tensor_id=tid, base_addr=base,
+                                  size_bytes=size, tile_bytes=tile_bytes,
+                                  n_acc=n_acc, operand_id=operand_id,
+                                  bypass_all=bypass)
+
+    A, B, C = 0, 1, 2
+    mk(A, mt, kt, n_acc=nt, operand_id=0)
+    mk(B, kt, nt, n_acc=mt, operand_id=1)
+    mk(C, mt, nt, n_acc=1, operand_id=2, bypass=True)
+
+    steps: List[List[Step]] = [[] for _ in range(n_cores)]
+    flops = 2.0 * tile * tile * tile
+    c_tiles = [(i, j) for i in range(mt) for j in range(nt)]
+    for idx, (i, j) in enumerate(c_tiles):
+        core = idx % n_cores
+        for kk in range(kt):
+            steps[core].append(Step(
+                loads=[(A, i * kt + kk), (B, kk * nt + j)], flops=flops))
+        steps[core].append(Step(stores=[(C, i * nt + j)]))
+
+    return Trace(name=f"matmul-{m}x{n}x{k}", tensors=tensors,
+                 core_steps=steps, core_group=[-1] * n_cores,
+                 core_is_leader=[True] * n_cores)
+
+
+def fa2_counts_ref(wl: AttnWorkload, n_cores: int = 16) -> DataflowCounts:
+    kv_lines_head = 2 * wl.seq_len * wl.head_dim * wl.dtype_bytes // LINE_BYTES
+    kv_distinct = kv_lines_head * wl.n_kv_heads * wl.n_batches
+    gs = wl.group_size
+
+    if wl.causal:
+        pass_frac = (wl.n_q_tiles + 1) / (2 * wl.n_q_tiles)
+    else:
+        pass_frac = 1.0
+
+    active_groups = wl.n_kv_heads
+    if wl.group_alloc == TEMPORAL:
+        accesses = kv_distinct * wl.n_q_tiles * pass_frac
+        intercore = 0
+        items_per_core = -(-wl.n_kv_heads * wl.n_batches // n_cores)
+        n_rounds = items_per_core * wl.n_q_tiles * (2 * wl.n_kv_tiles + 2)
+    else:
+        accesses = kv_distinct * wl.n_q_tiles * min(gs, n_cores) * pass_frac
+        intercore = accesses * (min(gs, n_cores) - 1) / min(gs, n_cores)
+        n_waves = -(-wl.n_q_heads // n_cores)
+        n_rounds = (wl.n_batches * n_waves * wl.n_q_tiles
+                    * (2 * wl.n_kv_tiles + 2))
+
+    s_active = active_groups * 2 * wl.seq_len * wl.head_dim * wl.dtype_bytes
+    qo_lines = (2 * wl.seq_len * wl.head_dim * wl.dtype_bytes // LINE_BYTES
+                ) * wl.n_q_heads * wl.n_batches
+    flops = (wl.flops_per_inner_step() * wl.n_q_tiles * wl.n_kv_tiles
+             * pass_frac * wl.n_q_heads * wl.n_batches)
+
+    return DataflowCounts(
+        name=f"{wl.name}-{wl.group_alloc}", line_bytes=LINE_BYTES,
+        n_kv_accesses=int(round(accesses)),
+        n_kv_distinct=int(kv_distinct),
+        n_bypass_lines=int(qo_lines),
+        n_intercore_reuse=int(round(intercore)),
+        s_work_active=int(s_active),
+        s_work_total=int(kv_distinct * LINE_BYTES // max(wl.n_batches, 1)),
+        flops_total=float(flops),
+        n_batches=wl.n_batches,
+        n_rounds=int(n_rounds),
+    )

@@ -12,7 +12,11 @@ from repro.core import kept_fraction, predict
 from repro.core.orchestrator import CacheOrchestrator
 from repro.core.tmu import TMU, TMUParams, TensorMeta
 from repro.core.traces import fa2_counts
-from repro.core.workloads import SPATIAL, TEMPORAL, AttnWorkload
+from repro.core.workloads import (SPATIAL, TEMPORAL, AttnWorkload,
+                                  DecodeWorkload, MoEWorkload)
+from repro.dataflows import (decode_paged_spec, fa2_spec, lower_to_counts,
+                             lower_to_trace, matmul_spec, mlp_chain_spec,
+                             moe_ffn_spec)
 from repro.launch.roofline import _shape_bytes, _wire_factor, param_count
 
 
@@ -91,6 +95,76 @@ def test_prediction_positive_and_counts_consistent(seq, kv, alloc):
                    n_rounds=counts.n_rounds)
     assert pred.cycles > 0
     assert pred.n_hit + pred.n_cold + pred.n_cf > 0
+
+
+# ---------------------------------------------------------------------------
+# Dataflow IR invariant: for every spec the suite can produce, the
+# trace lowering and the closed-form counts lowering agree on totals
+# (bytes touched, line accesses, flops, rounds) — one description, no
+# hand-synced twins.
+# ---------------------------------------------------------------------------
+def _random_spec(draw):
+    kind = draw(st.sampled_from(["fa2", "matmul", "decode", "moe", "mlp"]))
+    n_cores = draw(st.sampled_from([2, 4]))
+    if kind == "fa2":
+        kv = draw(st.sampled_from([1, 2, 4]))
+        gs = draw(st.sampled_from([1, 2, 4]))
+        wl = AttnWorkload(
+            "prop", n_q_heads=kv * gs, n_kv_heads=kv, head_dim=128,
+            seq_len=draw(st.sampled_from([256, 512])),
+            group_alloc=draw(st.sampled_from([TEMPORAL, SPATIAL])),
+            n_batches=draw(st.sampled_from([1, 2])),
+            causal=draw(st.booleans()))
+        return fa2_spec(wl, n_cores)
+    if kind == "matmul":
+        dims = [128 * draw(st.integers(1, 3)) for _ in range(3)]
+        return matmul_spec(*dims, tile=128, n_cores=n_cores)
+    if kind == "decode":
+        n_seqs = 2 * n_cores
+        wl = DecodeWorkload(
+            n_seqs=n_seqs, seq_len=draw(st.sampled_from([256, 512])),
+            n_steps=3, retire_step=draw(st.sampled_from([1, 2])),
+            n_short=draw(st.integers(0, n_seqs)))
+        return decode_paged_spec(wl, n_cores)
+    if kind == "moe":
+        hot = n_cores // 2
+        wl = MoEWorkload(n_experts=n_cores, n_hot=hot, d_model=128,
+                         d_ff=128, tile_bytes=4096, n_steps=3,
+                         warm_steps=draw(st.sampled_from([1, 2])))
+        return moe_ffn_spec(wl, n_cores)
+    dims = tuple(128 * draw(st.integers(1, 2)) for _ in range(4))
+    return mlp_chain_spec(m=256, dims=dims, tile=128, n_cores=n_cores)
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_ir_trace_totals_equal_closed_form_counts(data):
+    spec = _random_spec(data.draw)
+    trace = lower_to_trace(spec)
+    counts = lower_to_counts(spec)
+    ct = trace.compiled()
+    assert counts.n_rounds == trace.n_rounds
+    assert (counts.n_kv_accesses + counts.n_bypass_lines
+            == int(ct.n_acc_round.sum()))
+    assert float(ct.flops_round.sum()) == counts.flops_total
+    # class assignment partitions the tensor set (reuse vs bypass bytes)
+    bypass_bytes = sum(m.size_bytes for m in trace.tensors.values()
+                       if m.bypass_all)
+    assert (trace.total_bytes_touched()
+            == counts.n_kv_distinct * trace.line_bytes + bypass_bytes)
+    # per-tensor closed-form accesses match a literal trace walk
+    per = spec.per_tensor_line_accesses()
+    walked = {t.name: [0, 0] for t in spec.tensors}
+    names = [t.name for t in spec.tensors]
+    for steps in trace.core_steps:
+        for step in steps:
+            for tid, _ in step.loads:
+                walked[names[tid]][0] += \
+                    trace.tensors[tid].tile_bytes // trace.line_bytes
+            for tid, _ in step.stores:
+                walked[names[tid]][1] += \
+                    trace.tensors[tid].tile_bytes // trace.line_bytes
+    assert per == {k: tuple(v) for k, v in walked.items()}
 
 
 # ---------------------------------------------------------------------------
