@@ -3,15 +3,23 @@ policy set, cross-validated against the analytical model (§V-D/§VI-G).
 
 For each :class:`~repro.dataflows.SuiteCase` the spec is lowered once and
 swept under ``SUITE_POLICIES`` via the batched ``run_policies`` API; the
-same spec is lowered to closed-form counts and fed to ``predict`` with
-θ/λ fitted on the suite's own simulator points (the paper's per-hardware
-calibration).  The saved table reports, per scenario × policy: simulated
-cycles, hit rate, speedup over LRU, model-predicted cycles, and relative
-model error — plus the DBP-vs-LRU speedups the decode and MoE scenarios
-exist to demonstrate.
+same spec is lowered to counts (with the reuse-distance profile attached)
+and fed to ``predict`` under **both** hit engines side by side —
+``model="profile"`` (the IR-derived reuse-distance histogram, DESIGN.md
+§5) and ``model="closed"`` (the §V-C scalar step functions) — each with
+its own θ/λ calibration on the suite's simulator points.  Because
+fitting on the very points you report error for flatters the model, a
+**leave-one-scenario-out** column re-fits θ/λ with the row's scenario
+held out and reports the honest out-of-sample error next to the
+train-fit one.
+
+The saved table reports, per scenario × policy: simulated cycles, hit
+rate, speedup over LRU, and per engine the predicted cycles plus
+train-fit and LOSO relative errors — plus the DBP-vs-LRU speedups the
+decode / MoE / speculative-decoding scenarios exist to demonstrate.
 
 Run a single scenario (CI smoke): ``python -m benchmarks.suite_bench
---scenario decode-paged``.
+--scenario decode-paged``  (LOSO needs ≥ 2 scenarios and is skipped).
 """
 
 from __future__ import annotations
@@ -23,6 +31,8 @@ from repro.dataflows import (SUITE_POLICIES, build_suite, lower_to_counts,
                              lower_to_trace, suite_case)
 
 from .common import Timer, emit, save
+
+MODELS = ("closed", "profile")
 
 
 def _sweep_case(case, table, fit_points):
@@ -47,21 +57,47 @@ def _sweep_case(case, table, fit_points):
     return counts
 
 
-def _validate(cases, table, fit_points):
-    """Fit θ/λ on the suite's own points, then record per-row model
-    cycles and relative error (the §V-D calibration loop)."""
-    hw = cases[0].cfg
-    params = fit_params([p for _, p in fit_points], hw)
+def _record_errors(table, fit_points, hw, params, model, col):
+    """Predict every row under ``params``/``model`` and append the
+    ``model_cycles_*`` / ``model_rel_err_*`` columns; returns per-scenario
+    mean errors."""
     errs = {}
     for row_key, (counts, llc, pol, variant, gqa, rounds, target) \
             in fit_points:
-        pred = predict(counts, llc, pol, hw, params, variant, gqa,
-                       n_rounds=rounds).cycles
         row = table[row_key]
-        row["model_cycles"] = pred
-        row["model_rel_err"] = abs(pred - target) / target
-        errs.setdefault(row["scenario"], []).append(row["model_rel_err"])
-    return {k: float(np.mean(v)) for k, v in errs.items()}, params
+        pred = predict(counts, llc, pol, hw, params, variant, gqa,
+                       n_rounds=rounds, model=model).cycles
+        row[f"model_cycles_{col}"] = pred
+        row[f"model_rel_err_{col}"] = abs(pred - target) / target
+        errs.setdefault(row["scenario"], []).append(
+            row[f"model_rel_err_{col}"])
+    return {k: float(np.mean(v)) for k, v in errs.items()}
+
+
+def _validate(cases, table, fit_points):
+    """§V-D calibration under both hit engines, plus the honest
+    leave-one-scenario-out refits."""
+    hw = cases[0].cfg
+    errs, fitted = {}, {}
+    for model in MODELS:
+        params = fit_params([p for _, p in fit_points], hw, model=model)
+        fitted[model] = params
+        errs[model] = _record_errors(table, fit_points, hw, params, model,
+                                     model)
+        if len(cases) < 2:
+            continue
+        loso_errs = {}
+        for case in cases:
+            train = [p for k, p in fit_points
+                     if table[k]["scenario"] != case.key]
+            test = [(k, p) for k, p in fit_points
+                    if table[k]["scenario"] == case.key]
+            loso = fit_params(train, hw, model=model)
+            loso_errs.update(
+                _record_errors(table, test, hw, loso, model,
+                               f"loso_{model}"))
+        errs[f"loso_{model}"] = loso_errs
+    return errs, fitted
 
 
 def run(full: bool = False, scenario: str | None = None) -> dict:
@@ -74,9 +110,13 @@ def run(full: bool = False, scenario: str | None = None) -> dict:
             cases = build_suite(full=full)
         for case in cases:
             _sweep_case(case, table, fit_points)
-        errs, params = _validate(cases, table, fit_points)
+        errs, fitted = _validate(cases, table, fit_points)
 
-    parts = [f"model_err_mean={float(np.mean(list(errs.values()))):.3f}"]
+    parts = []
+    for key in ("profile", "closed", "loso_profile"):
+        if key in errs:
+            mean = float(np.mean(list(errs[key].values())))
+            parts.append(f"model_err_mean_{key}={mean:.3f}")
     for case in cases:
         if case.expect_dbp_win:
             dbp = table[f"{case.key}-at+dbp"]["speedup_vs_lru"]
@@ -84,10 +124,12 @@ def run(full: bool = False, scenario: str | None = None) -> dict:
     emit("suite_bench", t.elapsed_us, ";".join(parts))
     save("suite_bench", {
         "rows": table,
+        "dbp_win_scenarios": [c.key for c in cases if c.expect_dbp_win],
         "model_rel_err_by_scenario": errs,
         "fitted_params": {
-            "theta1": params.theta1, "theta2": params.theta2,
-            "theta3": params.theta3, "lam": params.lam},
+            model: {"theta1": p.theta1, "theta2": p.theta2,
+                    "theta3": p.theta3, "lam": p.lam}
+            for model, p in fitted.items()},
     })
     return table
 

@@ -1,0 +1,47 @@
+#!/usr/bin/env python
+"""CI gate over the most recent ``suite_bench`` report.
+
+Asserts, on whatever scenario set the report covers (single smoke
+scenario or the full suite):
+
+* the reuse-profile model's mean relative error is no worse than the
+  closed-form model's (the PR-3 accuracy win is regression-gated);
+* every DBP-win scenario in the report still beats plain LRU under
+  ``at+dbp`` (speedup > 1.0).
+
+Run it immediately after each ``benchmarks.suite_bench`` invocation —
+the benchmark always writes ``reports/benchmarks/suite_bench.json``, so
+a later run overwrites an earlier scenario's numbers.
+"""
+
+import json
+import sys
+
+import numpy as np
+
+path = sys.argv[1] if len(sys.argv) > 1 else \
+    "reports/benchmarks/suite_bench.json"
+with open(path) as f:
+    report = json.load(f)
+
+errs = report["model_rel_err_by_scenario"]
+prof = float(np.mean(list(errs["profile"].values())))
+closed = float(np.mean(list(errs["closed"].values())))
+scenarios = sorted(errs["profile"])
+# On a single-scenario smoke the 4-parameter closed fit can memorize its
+# own 5 points, so "profile <= closed" alone would be vacuous there; an
+# absolute floor keeps the gate meaningful in both directions.  Explicit
+# exits, not asserts: python -O must not strip the gate.
+ABS_OK = 0.15
+if prof > max(closed, ABS_OK):
+    sys.exit(f"reuse-profile model regressed on {scenarios}: mean rel "
+             f"err {prof:.3f} > closed-form {closed:.3f} (and > {ABS_OK})")
+
+for key in report.get("dbp_win_scenarios", []):
+    dbp = report["rows"][f"{key}-at+dbp"]["speedup_vs_lru"]
+    if not dbp > 1.0:
+        sys.exit(f"{key}: DBP win over LRU lost ({dbp:.3f}x)")
+
+print(f"suite gate OK on {scenarios}: profile {prof:.3f} <= "
+      f"max(closed {closed:.3f}, {ABS_OK}); dbp wins "
+      f"{report.get('dbp_win_scenarios', [])}")

@@ -12,7 +12,8 @@ from .tmu import TMU, DeadFIFO, TMUParams, TensorMeta
 from .traces import (CompiledTrace, DataflowCounts, Step, Trace,
                      build_fa2_trace, build_matmul_trace, fa2_counts)
 from .workloads import (PAPER_WORKLOADS, SPATIAL, TEMPORAL, AttnWorkload,
-                        DecodeWorkload, MoEWorkload, get_workload)
+                        DecodeWorkload, MoEWorkload, SpecDecodeWorkload,
+                        get_workload)
 
 __all__ = [
     "ModelParams", "Prediction", "fit_params", "kendall_tau",
@@ -25,5 +26,5 @@ __all__ = [
     "CompiledTrace", "DataflowCounts", "Step", "Trace", "build_fa2_trace",
     "build_matmul_trace", "fa2_counts",
     "PAPER_WORKLOADS", "SPATIAL", "TEMPORAL", "AttnWorkload",
-    "DecodeWorkload", "MoEWorkload", "get_workload",
+    "DecodeWorkload", "MoEWorkload", "SpecDecodeWorkload", "get_workload",
 ]

@@ -1,26 +1,43 @@
-"""Cache-integrated analytical model (paper §V, Eq. 1–5).
+"""Cache-integrated analytical model (paper §V + DESIGN.md §5).
 
-Predicts execution time for a dataflow from closed-form request counts
-(``traces.fa2_counts``) — no simulation in the loop.  The paper's
-structure is kept exactly:
+Predicts execution time for a dataflow with no simulation in the loop.
+Two hit-estimation engines share the paper's Eq. 1–5 time machinery:
+
+* ``model="profile"`` (default) — evaluates the IR-derived
+  reuse-distance profile (``repro.dataflows.reuse``,
+  ``DataflowCounts.reuse_profile``).  Every cache mechanism is a small
+  *transform of the profile* and the hit mass is the reuse mass whose
+  transformed distance fits the effective capacity — one evaluation
+  path for all policies (DESIGN.md §5):
+
+  - **DBP** removes dead-epoch pollution: distance drops from
+    ``d_live + d_dead`` to ``d_live``.
+  - **Anti-thrashing** partitions reuse mass into the hardware's
+    ``2^B_BITS`` ``tag``-derived priority tiers and protects the top
+    tiers whose footprint fits; unprotected mass competes for the
+    remaining capacity with correspondingly shrunk distances.
+  - **Bypass gear g** deletes the lowest ``g`` tiers' mass (their
+    reuses miss — including inter-core reuses, the §IV-E failure mode)
+    and shrinks everyone else's distances by the deleted fraction;
+    dynamic bypassing is its upper bound, the best static gear (§V-A).
+  - MSHR-merge mass (distance 0) always hits, under every policy.
+
+* ``model="closed"`` — the original §V-C scalar step functions
+  (``kept_fraction``), kept bit-identical as the fallback for counts
+  that carry no profile and as the frozen-oracle baseline.
+
+Shared time structure (both engines):
 
 * Eq. 1: each request class is bottlenecked by the slowest of
   {core LSU issue, LLC throughput, DRAM bandwidth}.
 * Eq. 2: ``t = t_hit + t_cold + max(t_comp, t_cf)`` — cold misses are
   bursty and exposed; conflict misses are dispersed and overlap with
-  compute.
-* Eq. 3–5: conflict-miss bandwidth from the demand rate ``v_cf,dmd`` with
-  fitted constants θ1, θ2, θ3, λ (per hardware/policy family, §V-D).
-* §V-C hit estimation: K/V streaming reuse → LRU hit rate is a step
-  function of (reuse distance ≤ cache size); anti-thrashing keeps
-  ``S_kept = S_work·M/2^B_BITS ≤ S_LLC·(A-1)/A``; *ideal* bypassing keeps
-  exactly the cache size (and may use the whole cache, §VI-E3); inter-core
-  reuses are captured by LLC+MSHR in a single ``v_LLC`` term.
-
-The model "does not need to precisely model every variant … it is
-acceptable as long as it provides a proxy or a bound to a properly-set
-policy" (§V-A): dynamic bypassing is modeled by its upper bound, the
-optimal static gear, exactly as the paper does.
+  compute.  The profile engine applies Eq. 2 at the simulator's own
+  time quantum (per lockstep round, DESIGN.md §7.2); the closed engine
+  applies it once globally.
+* Eq. 3–5: conflict-miss bandwidth from the demand rate ``v_cf,dmd``
+  with fitted constants θ1, θ2, θ3, λ (per hardware/policy family,
+  §V-D).
 """
 
 from __future__ import annotations
@@ -37,6 +54,10 @@ from .traces import DataflowCounts
 
 MODEL_POLICIES = ("lru", "dbp", "at+dbp", "bypass+dbp", "all")
 BYPASS_VARIANTS = ("fix1", "fix3", "optimal")
+#: every policy name either hit engine resolves (superset of the paper's
+#: figure set; the simulator's named_policy uses the same vocabulary)
+_KNOWN_POLICIES = ("lru", "at", "dbp", "at+dbp", "lru+bypass", "at+bypass",
+                   "bypass+dbp", "all")
 
 
 @dataclass(frozen=True)
@@ -115,6 +136,220 @@ def kept_fraction(policy: str, s_work: float, s_llc: float, assoc: int,
 
 
 # ---------------------------------------------------------------------------
+# Profile engine: policy transforms over the reuse-distance profile
+# (DESIGN.md §5; the profile itself is lowered in repro.dataflows.reuse)
+# ---------------------------------------------------------------------------
+def parse_model_policy(policy: str) -> Tuple[bool, bool, bool]:
+    """Resolve a policy name to its mechanism flags ``(at, dbp, bypass)``."""
+    if policy not in _KNOWN_POLICIES:
+        raise KeyError(f"unknown model policy {policy!r}")
+    return (policy in ("at", "at+dbp", "at+bypass", "all"),
+            "dbp" in policy or policy == "all",
+            "bypass" in policy or policy == "all")
+
+
+def _gear_candidates(bypass: bool, variant: str, gqa: bool,
+                     b_bits: int) -> Tuple[int, ...]:
+    """Gears to evaluate: none → gear 0; static fixN → that gear; the
+    conservative gqa variant bypasses nothing the model credits (§IV-E);
+    dynamic ("optimal") → every gear, the paper's upper-bound treatment."""
+    if not bypass or gqa:
+        return (0,)
+    if variant.startswith("fix"):
+        return (int(variant[3:]),)
+    return tuple(range((1 << b_bits) + 1))
+
+
+def _hit_prob(d: np.ndarray, lo: float, hi: float) -> np.ndarray:
+    """Set-associative capacity ramp: certain hit up to ``lo`` =
+    ``C·(A-1)/A`` stack lines, certain miss past ``hi`` = ``C·(A+1)/A``,
+    linear in between (hashed set mapping spreads a burst binomially
+    over sets, so the all-or-nothing step of the closed forms becomes a
+    band around the capacity)."""
+    if hi <= lo:
+        return (d <= lo).astype(float)
+    return np.clip((hi - d) / (hi - lo), 0.0, 1.0)
+
+
+def _profile_outcome(prof, llc_bytes: int, assoc: int, at: bool, dbp: bool,
+                     gear: int, b_bits: int) -> dict:
+    """Per-round request-class masses under one transformed profile.
+
+    The single evaluation rule: a reuse entry hits with the probability
+    that its transformed distance fits the effective capacity left to
+    its mass class.  All mechanism effects are transforms applied before
+    that comparison.  Cached on the profile per (geometry, mechanism)
+    key — θ/λ only enter the time aggregation, so calibration reuses
+    these aggregates.
+    """
+    key = (llc_bytes, assoc, at, dbp, gear, b_bits)
+    out = prof._eval_cache.get(key)
+    if out is not None:
+        return out
+
+    cap_lines = llc_bytes // prof.line_bytes
+    c_lo = cap_lines * (assoc - 1) / assoc
+    c_hi = cap_lines * (assoc + 1) / assoc
+    num_sets = max(cap_lines // assoc, 1)
+    n_tiers = 1 << b_bits
+
+    # hardware priority tier = tag[B_BITS-1:0]; tag = line // num_sets
+    t_prio = (prof.t_line // num_sets) % n_tiers
+    e_prio = (prof.e_line // num_sets) % n_tiers
+    fp = np.bincount(t_prio, weights=prof.t_mass.astype(float),
+                     minlength=n_tiers)
+    total_fp = float(fp.sum())
+    if dbp and total_fp > 0:
+        # dead generations retire on the fly: only the peak live stack
+        # competes for capacity, spread over the tiers proportionally
+        fp = fp * (prof.max_live_lines / total_fp)
+
+    # --- bypass transform: lowest `gear` tiers never allocate ----------
+    surv_tier = np.arange(n_tiers) >= gear
+    fp_surv = np.where(surv_tier, fp, 0.0)
+    W = float(fp_surv.sum())
+    stack_total = float(fp.sum())
+    bypassed = (e_prio < gear) & ~prof.e_mshr
+
+    # --- dbp transform: dead-epoch pollution leaves the stack ----------
+    d = (prof.e_dlive if dbp else prof.e_dlive + prof.e_ddead).astype(float)
+
+    if at:
+        # --- anti-thrashing transform: protect top tiers that fit -----
+        order = np.arange(n_tiers - 1, -1, -1)
+        cum = np.cumsum(fp_surv[order])
+        prot_tier = np.zeros(n_tiers, dtype=bool)
+        prot_tier[order[cum <= c_lo]] = True
+        prot_mass = float(fp_surv[prot_tier].sum())
+        frac_u = ((W - prot_mass) / stack_total) if stack_total else 0.0
+        protected = prot_tier[e_prio] & surv_tier[e_prio]
+        p_hit = np.where(protected, 1.0,
+                         _hit_prob(d * frac_u, max(c_lo - prot_mass, 0.0),
+                                   max(c_hi - prot_mass, 1.0)))
+    else:
+        shrink = (W / stack_total) if stack_total else 1.0
+        p_hit = _hit_prob(d * shrink, c_lo, c_hi)
+
+    p_hit = np.where(bypassed, 0.0, p_hit)
+    p_hit = np.where(prof.e_mshr, 1.0, p_hit)
+
+    nr = prof.n_rounds
+    w = prof.e_mass.astype(float)
+    h_r = np.bincount(prof.e_round, weights=w * p_hit, minlength=nr)
+    cf_reuse_r = np.bincount(prof.e_round, weights=w * (1.0 - p_hit),
+                             minlength=nr)
+    cold_r = (prof.cold_round + prof.byp_cold_round).astype(float)
+    cf_r = cf_reuse_r + prof.byp_rep_round
+    # dirtied reuse-carrier lines write back when evicted: scale the
+    # dirty volume by the reuse-miss fraction (fits → stays resident)
+    total_reuse = float(w.sum())
+    miss_frac = float(cf_reuse_r.sum()) / total_reuse if total_reuse else 0.0
+    wb_r = prof.wb_round * miss_frac
+
+    # feedback observable for the dynamic-gear controller emulation:
+    # evictions ≈ allocating misses beyond the warm-up fills (the first
+    # cap_lines allocations land in invalid ways and evict nothing;
+    # bypassed fills never allocate).  Fraction against the *current*
+    # (possibly dbp-rescaled) footprint — the rescale is uniform, so
+    # this is the true bypassed-tier share.
+    byp_fp_frac = (float(fp[:gear].sum()) / stack_total) if stack_total \
+        else 0.0
+    allocations = float((w * (1.0 - p_hit) * ~bypassed).sum()) \
+        + float(prof.cold_round.sum()) * (1.0 - byp_fp_frac)
+    evictions = max(allocations - cap_lines, 0.0)
+    requests = float(h_r.sum() + cold_r.sum() + cf_r.sum())
+
+    out = {
+        "h_r": h_r, "cold_r": cold_r, "cf_r": cf_r, "wb_r": wb_r,
+        "n_hit": float(h_r.sum()), "n_cold": float(cold_r.sum()),
+        "n_cf": float(cf_r.sum()),
+        "evict_rate": evictions / requests if requests else 0.0,
+        "kept": float((w * p_hit).sum() / total_reuse)
+        if total_reuse else 1.0,
+    }
+    prof._eval_cache[key] = out
+    return out
+
+
+def _profile_prediction(prof, outcome: dict, hw: SimConfig,
+                        params: ModelParams,
+                        n_rounds: Optional[int] = None) -> Prediction:
+    """Eq. 1–5 applied at the simulator's round granularity (§7.2).
+
+    ``n_rounds`` overrides the scheduling-overhead round count like the
+    closed path's parameter does; by default the profile's own round
+    count is charged.
+    """
+    issue = hw.n_cores * hw.ipc_mem
+    v = hw.v_llc
+    bw = hw.dram_lines_per_cycle
+    h_r, cold_r = outcome["h_r"], outcome["cold_r"]
+    cf_r, wb_r = outcome["cf_r"], outcome["wb_r"]
+    flops_r = prof.flops_round
+
+    t_hit = np.maximum(h_r / issue, h_r / v)
+    t_cold = np.maximum(np.maximum(cold_r / issue, cold_r / v),
+                        cold_r / (params.theta1 * bw))
+    # Eq. 3 per round: conflict-demand density over the round's stream
+    n_mem = h_r + cold_r + cf_r
+    denom = n_mem / hw.ipc_mem + flops_r / hw.core_flops_per_cycle
+    eta = np.divide(cf_r / hw.ipc_mem, denom,
+                    out=np.zeros_like(cf_r), where=denom > 0)
+    v_dmd = np.minimum(eta * issue, v)
+    bw_cf = np.clip(params.lam * v_dmd, params.theta2 * bw,
+                    params.theta3 * bw)
+    t_cf = np.maximum(np.maximum(cf_r / issue, cf_r / v),
+                      (cf_r + wb_r) / bw_cf)
+    t_comp = flops_r / (hw.n_cores * hw.core_flops_per_cycle)
+
+    overhead_rounds = prof.n_rounds if n_rounds is None else n_rounds
+    cycles = float((t_hit + t_cold + np.maximum(t_comp, t_cf)).sum()) \
+        + params.round_overhead * overhead_rounds
+    return Prediction(
+        cycles=cycles, t_hit=float(t_hit.sum()), t_cold=float(t_cold.sum()),
+        t_cf=float(t_cf.sum()), t_comp=float(t_comp.sum()),
+        n_hit=outcome["n_hit"], n_cold=outcome["n_cold"],
+        n_cf=outcome["n_cf"], kept_fraction=outcome["kept"])
+
+
+def _predict_profile(counts: DataflowCounts, llc_bytes: int, policy: str,
+                     hw: SimConfig, params: ModelParams,
+                     bypass_variant: str, gqa: bool, b_bits: int,
+                     n_rounds: Optional[int] = None) -> Prediction:
+    prof = counts.reuse_profile
+    at, dbp, bypass = parse_model_policy(policy)
+    if bypass and bypass_variant.startswith("fix"):
+        at = True          # static gears run with at enabled (§VI-E)
+    gears = _gear_candidates(bypass, bypass_variant, gqa, b_bits)
+    if len(gears) > 1:
+        # dynamic bypassing: emulate the per-slice feedback law (§IV-D)
+        # instead of assuming the best-case gear — the controller raises
+        # the gear until the eviction rate drops under its upper bound,
+        # so it converges to the *smallest* such gear (and to max gear
+        # when no gear tames the rate), even when that over-bypasses and
+        # destroys inter-core reuse (the §IV-E failure the gqa variant
+        # exists to avoid).
+        from .policies import PolicyConfig
+        ub = PolicyConfig().bypass_ub
+        chosen = gears[-1]
+        for gear in gears:
+            rate = _profile_outcome(prof, llc_bytes, hw.llc_assoc, at, dbp,
+                                    gear, b_bits)["evict_rate"]
+            if rate <= ub:
+                chosen = gear
+                break
+        gears = (chosen,)
+    best: Optional[Prediction] = None
+    for gear in gears:
+        outcome = _profile_outcome(prof, llc_bytes, hw.llc_assoc, at, dbp,
+                                   gear, b_bits)
+        pred = _profile_prediction(prof, outcome, hw, params, n_rounds)
+        if best is None or pred.cycles < best.cycles:
+            best = pred
+    return best
+
+
+# ---------------------------------------------------------------------------
 # Eq. 1–5
 # ---------------------------------------------------------------------------
 def predict(counts: DataflowCounts, llc_bytes: int, policy: str,
@@ -123,9 +358,22 @@ def predict(counts: DataflowCounts, llc_bytes: int, policy: str,
             bypass_variant: str = "optimal",
             gqa: bool = False,
             b_bits: int = 3,
-            n_rounds: Optional[int] = None) -> Prediction:
+            n_rounds: Optional[int] = None,
+            model: str = "profile") -> Prediction:
+    """Predict cycles for one (dataflow, cache size, policy) point.
+
+    ``model="profile"`` (default) evaluates the reuse-distance profile
+    attached to ``counts`` and falls back to the closed forms when the
+    producer skipped the profile lowering; ``model="closed"`` forces the
+    original §V-C scalar step functions.
+    """
     hw = hw or SimConfig()
     params = params or ModelParams()
+    if model not in ("profile", "closed"):
+        raise KeyError(f"unknown model {model!r}")
+    if model == "profile" and counts.reuse_profile is not None:
+        return _predict_profile(counts, llc_bytes, policy, hw, params,
+                                bypass_variant, gqa, b_bits, n_rounds)
 
     pollution = 1.0
     if counts.n_batches > 1 and policy == "lru":
@@ -187,12 +435,16 @@ def predict(counts: DataflowCounts, llc_bytes: int, policy: str,
 # ---------------------------------------------------------------------------
 def fit_params(points: Sequence[Tuple[DataflowCounts, int, str, str, bool,
                                       Optional[int], float]],
-               hw: Optional[SimConfig] = None) -> ModelParams:
+               hw: Optional[SimConfig] = None,
+               model: str = "profile") -> ModelParams:
     """Fit (θ1, θ2, θ3, λ) to simulator measurements.
 
     ``points``: (counts, llc_bytes, policy, bypass_variant, gqa, n_rounds,
     simulated_cycles) tuples.  Coarse grid search + refinement on mean
-    squared log error, mirroring the paper's empirical fitting.
+    squared log error, mirroring the paper's empirical fitting.  ``model``
+    selects the hit engine the constants are fitted for (the profile
+    engine caches its θ-independent request aggregates, so the grid
+    search only re-runs the cheap time aggregation).
     """
     hw = hw or SimConfig()
 
@@ -200,7 +452,7 @@ def fit_params(points: Sequence[Tuple[DataflowCounts, int, str, str, bool,
         err = 0.0
         for counts, llc, pol, variant, gqa, rounds, target in points:
             pred = predict(counts, llc, pol, hw, p, variant, gqa,
-                           n_rounds=rounds).cycles
+                           n_rounds=rounds, model=model).cycles
             err += (math.log(max(pred, 1.0)) - math.log(max(target, 1.0))) ** 2
         return err / max(len(points), 1)
 

@@ -129,7 +129,8 @@ class GearController:
                                            minlength=self.n_slices)
 
     def tick(self, now_cycles: float) -> None:
-        if now_cycles - self._window_start < self.cfg.window_cycles:
+        elapsed = now_cycles - self._window_start
+        if elapsed < self.cfg.window_cycles:
             return
         acc = np.maximum(self._accesses, 1)
         rate = self._evictions / acc
@@ -144,7 +145,12 @@ class GearController:
                                 - down.astype(np.int64), 0, self.max_gear)
         self._evictions[:] = 0
         self._accesses[:] = 0
-        self._window_start = now_cycles
+        # advance in whole window multiples: snapping to now_cycles would
+        # let a late tick stretch the next feedback window by the
+        # overshoot, skewing the eviction *rate* the gear law compares
+        # against its fixed thresholds
+        self._window_start += (elapsed // self.cfg.window_cycles) \
+            * self.cfg.window_cycles
 
     def contended(self) -> np.ndarray:
         """Per-slice contention flag used by the gqa_bypass variant."""

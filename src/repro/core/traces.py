@@ -368,6 +368,13 @@ class DataflowCounts:
     flops_total: float
     n_batches: int
     n_rounds: int               # lockstep rounds (scheduling overhead term)
+    # IR-derived reuse-distance profile (repro.dataflows.reuse), consumed
+    # by the analytical model's ``model="profile"`` path.  Excluded from
+    # equality so counts stay pinnable against the frozen closed-form
+    # oracles; None when the producer skipped the schedule walk (the
+    # model then falls back to the §V-C closed forms).
+    reuse_profile: Optional[object] = field(default=None, compare=False,
+                                            repr=False)
 
     @property
     def n_temporal_reuse(self) -> int:
@@ -375,9 +382,17 @@ class DataflowCounts:
         return self.n_kv_accesses - self.n_kv_distinct - self.n_intercore_reuse
 
 
-def fa2_counts(wl: AttnWorkload, n_cores: int = 16) -> DataflowCounts:
+def fa2_counts(wl: AttnWorkload, n_cores: int = 16,
+               with_profile: bool = False) -> DataflowCounts:
     """Closed-form FA2 request counts, derived from the same IR spec the
     trace is lowered from (pinned bit-identical to the former hand-kept
-    formula by tests/test_dataflow_ir.py)."""
+    formula by tests/test_dataflow_ir.py).
+
+    ``with_profile`` additionally attaches the reuse-distance profile
+    (``model="profile"`` input).  Off by default here: this historical
+    entry point feeds the closed-form figure sweeps, some at
+    long-context shapes where the schedule walk is not free — the IR
+    path (``repro.dataflows.lower_to_counts``) attaches it by default.
+    """
     from repro.dataflows import fa2_spec, lower_to_counts
-    return lower_to_counts(fa2_spec(wl, n_cores))
+    return lower_to_counts(fa2_spec(wl, n_cores), with_profile=with_profile)

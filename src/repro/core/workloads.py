@@ -141,6 +141,59 @@ class DecodeWorkload:
 
 
 @dataclass(frozen=True)
+class SpecDecodeWorkload:
+    """Speculative decoding: per verification cycle, a small draft model
+    autoregressively proposes ``gamma`` tokens (streaming its own
+    speculation-window KV ``gamma`` times), then the target model
+    verifies them in one pass over its full KV history.
+
+    The draft KV of one speculation round has a *short, known lifetime*:
+    it dies at verification (accepted tokens re-enter through the target
+    KV, rejected ones are discarded), so each round's draft KV is its
+    own liveness epoch — the §VI-F two-epoch retirement pattern
+    interleaved with a persistent reuse carrier.  ``nAcc`` of a draft
+    page is exactly ``gamma``; DBP retires the whole speculation window
+    the moment verification has consumed it, while LRU drags every
+    retired window through the LLC as dead pollution.
+    """
+
+    name: str = "spec-decode"
+    n_seqs: int = 16
+    target_len: int = 512             # target-model KV history rows/seq
+    draft_len: int = 256              # draft speculation-window rows/seq
+    head_dim: int = 128
+    n_kv_heads: int = 1
+    page_rows: int = 128
+    dtype_bytes: int = 1
+    gamma: int = 4                    # draft tokens per verification
+    n_verify: int = 4                 # draft→verify cycles simulated
+
+    def __post_init__(self) -> None:
+        if self.target_len % self.page_rows or self.draft_len % self.page_rows:
+            raise ValueError("KV lengths must be page-aligned")
+        if self.gamma < 1 or self.n_verify < 1:
+            raise ValueError("gamma and n_verify must be >= 1")
+
+    @property
+    def page_bytes(self) -> int:
+        return (self.page_rows * self.head_dim * self.n_kv_heads
+                * self.dtype_bytes)
+
+    @property
+    def n_target_pages(self) -> int:
+        return self.target_len // self.page_rows
+
+    @property
+    def n_draft_pages(self) -> int:
+        return self.draft_len // self.page_rows
+
+    @property
+    def token_bytes(self) -> int:
+        """One decode token's activation row (Q or logit output)."""
+        return self.head_dim * self.n_kv_heads * self.dtype_bytes
+
+
+@dataclass(frozen=True)
 class MoEWorkload:
     """Expert-FFN of a Mixture-of-Experts layer with skewed routing:
     ``n_hot`` experts stay active for the whole run and are co-streamed by

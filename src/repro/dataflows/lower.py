@@ -77,7 +77,8 @@ def lower_to_trace(spec: DataflowSpec) -> Trace:
 
 
 # ---------------------------------------------------------------------------
-def lower_to_counts(spec: DataflowSpec) -> DataflowCounts:
+def lower_to_counts(spec: DataflowSpec,
+                    with_profile: bool = True) -> DataflowCounts:
     """Derive the analytical model's request counts (§V, Eq. 1–3) from the
     spec — closed-form per tensor (tile transfer counts × lines per tile,
     placement annotations for sharing), no trace expansion and no
@@ -88,6 +89,13 @@ def lower_to_counts(spec: DataflowSpec) -> DataflowCounts:
     and repeat touches split into temporal and inter-core reuse via the
     declared ``sharers`` — while ``bypass`` tensors are the bursty
     always-DRAM (Q/O) class.
+
+    ``with_profile`` (default) also runs the reuse-distance lowering
+    (DESIGN.md §5) and attaches the resulting
+    :class:`~repro.dataflows.reuse.ReuseProfile` so the analytical
+    model's default ``model="profile"`` path has its input; pass
+    ``False`` to skip the schedule walk when only the scalar counts are
+    needed (e.g. very long-context closed-form sweeps).
     """
     per_tensor = spec.per_tensor_line_accesses()
     n_kv_accesses = 0.0
@@ -114,6 +122,11 @@ def lower_to_counts(spec: DataflowSpec) -> DataflowCounts:
     s_active = max(live_bytes) if live_bytes else 0
     s_total = live_bytes[0] if live_bytes else 0
 
+    profile = None
+    if with_profile:
+        from .reuse import lower_to_reuse_profile
+        profile = lower_to_reuse_profile(spec)
+
     return DataflowCounts(
         name=spec.name, line_bytes=spec.line_bytes,
         n_kv_accesses=int(round(n_kv_accesses)),
@@ -125,6 +138,7 @@ def lower_to_counts(spec: DataflowSpec) -> DataflowCounts:
         flops_total=float(spec.total_flops()),
         n_batches=spec.n_epochs,
         n_rounds=int(spec.n_rounds),
+        reuse_profile=profile,
     )
 
 

@@ -17,6 +17,10 @@ a capability the IR provides and a paper mechanism end to end:
   attention outputs, bypass-class in stand-alone FA2, become reuse
   carriers read back by the FFN matmuls — cross-op dataflow knowledge is
   exactly what the TMU registration interface exists to convey.
+* :func:`spec_decode_spec` — speculative decoding: per-round draft-model
+  KV with a short known lifetime (its own liveness epoch, dead at
+  verification) interleaved with persistent target-model KV — the
+  §VI-F retirement pattern at speculation-round cadence.
 """
 
 from __future__ import annotations
@@ -24,7 +28,7 @@ from __future__ import annotations
 from typing import List
 
 from repro.core.workloads import (TEMPORAL, AttnWorkload, DecodeWorkload,
-                                  MoEWorkload)
+                                  MoEWorkload, SpecDecodeWorkload)
 
 from .fa2 import _kv_extent, emit_matmul_rounds
 from .ir import DataflowSpec, SpecBuilder
@@ -277,4 +281,98 @@ def transformer_layer_spec(wl: AttnWorkload, d_ff: int = 1024,
         b.step(core, stores=[(H, i * ft + j)])
     b.pad_to_sync()
     _emit_matmul(b, H, W_dn, Y, mt, ft, dt, flops)
+    return b.build()
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding: short-lived draft KV epochs + persistent target KV
+# ---------------------------------------------------------------------------
+def spec_decode_spec(wl: SpecDecodeWorkload,
+                     n_cores: int = 16) -> DataflowSpec:
+    """Draft/verify cycles over paged KV (ROADMAP scenario candidate).
+
+    Per verification cycle ``r`` and sequence: the draft model streams
+    its speculation-window KV ``gamma`` times (one autoregressive pass
+    per proposed token), then the target model verifies the batch in one
+    pass over its full history *plus* the speculation window (its
+    attention over the draft suffix reads the draft-layout KV once
+    rather than recomputing it), so the dying window's last touches
+    interleave with the persistent target stream.  Draft tensors of
+    round ``r`` live in epoch ``r`` only and declare
+    ``nAcc = gamma + 1`` — the TMU retires the whole window on exactly
+    that verification read.  Under DBP the retired window frees its
+    capacity immediately; under LRU it is the *most recently used* dead
+    mass sitting on top of the target stream's reuse window, which is
+    precisely the §VI-F pollution pattern recurring every cycle.
+    """
+    if wl.n_seqs % n_cores:
+        raise ValueError("n_seqs must be a multiple of n_cores")
+    b = SpecBuilder(wl.name, n_cores)
+
+    # persistent target KV, declared first: one contiguous run of tag
+    # space per sequence (dead-id / priority granularity, §IV-B)
+    target: List[tuple] = []
+    for s in range(wl.n_seqs):
+        target.append(tuple(b.tensor(
+            f"T{kind}.s{s}", size_bytes=wl.n_target_pages * wl.page_bytes,
+            tile_bytes=wl.page_bytes, n_acc=wl.n_verify, operand_id=1,
+            epoch=(0, wl.n_verify - 1)) for kind in ("K", "V")))
+    # per-round draft KV: its own epoch, dies at verification
+    draft: List[List[tuple]] = []
+    for s in range(wl.n_seqs):
+        gens = []
+        for r in range(wl.n_verify):
+            gens.append(tuple(b.tensor(
+                f"D{kind}.s{s}.r{r}",
+                size_bytes=wl.n_draft_pages * wl.page_bytes,
+                tile_bytes=wl.page_bytes, n_acc=wl.gamma + 1, operand_id=1,
+                epoch=(r, r)) for kind in ("K", "V")))
+        draft.append(gens)
+    # bursty token streams (Q in, accepted-token logits out)
+    qo = []
+    for s in range(wl.n_seqs):
+        tokens = wl.n_verify * (wl.gamma + 1)
+        q = b.tensor(f"Q.s{s}", size_bytes=tokens * wl.token_bytes,
+                     tile_bytes=wl.token_bytes, n_acc=1, operand_id=0,
+                     bypass=True, epoch=(0, wl.n_verify - 1))
+        o = b.tensor(f"O.s{s}", size_bytes=wl.n_verify * wl.token_bytes,
+                     tile_bytes=wl.token_bytes, n_acc=1, operand_id=2,
+                     bypass=True, epoch=(0, wl.n_verify - 1))
+        qo.append((q, o))
+
+    half = 2.0 * wl.page_rows * wl.head_dim * wl.n_kv_heads
+    for r in range(wl.n_verify):
+        for s in range(wl.n_seqs):
+            c = s % n_cores
+            dk, dv = draft[s][r]
+            # draft phase: gamma autoregressive passes over the window
+            for t in range(wl.gamma):
+                b.step(c, loads=[(qo[s][0], r * (wl.gamma + 1) + t)])
+                for p in range(wl.n_draft_pages):
+                    b.step(c, loads=[(dk, p)], flops=half)
+                    b.step(c, loads=[(dv, p)], flops=half)
+            # verify phase: one pass over the full target history with
+            # the speculation window's pages interleaved (the target's
+            # attention over the draft suffix reads them once more —
+            # their last access, so retirement lands mid-stream)
+            tk, tv = target[s]
+            b.step(c, loads=[(qo[s][0], r * (wl.gamma + 1) + wl.gamma)])
+            stride = max(wl.n_target_pages // wl.n_draft_pages, 1)
+            d_idx = 0
+            for p in range(wl.n_target_pages):
+                b.step(c, loads=[(tk, p)], flops=half * wl.gamma)
+                b.step(c, loads=[(tv, p)], flops=half * wl.gamma)
+                if p % stride == stride - 1 and d_idx < wl.n_draft_pages:
+                    b.step(c, loads=[(dk, d_idx)], flops=half)
+                    b.step(c, loads=[(dv, d_idx)], flops=half)
+                    d_idx += 1
+            # windows larger than the target history (n_draft_pages >
+            # n_target_pages) finish their verify reads here so every
+            # draft page still reaches nAcc = gamma + 1 and retires
+            while d_idx < wl.n_draft_pages:
+                b.step(c, loads=[(dk, d_idx)], flops=half)
+                b.step(c, loads=[(dv, d_idx)], flops=half)
+                d_idx += 1
+            b.step(c, stores=[(qo[s][1], r)])
+        b.pad_to_sync()
     return b.build()

@@ -16,12 +16,12 @@ from typing import List, Tuple
 
 from repro.core.simulator import SimConfig
 from repro.core.workloads import (AttnWorkload, DecodeWorkload, MoEWorkload,
-                                  get_workload)
+                                  SpecDecodeWorkload, get_workload)
 
 from .fa2 import fa2_spec, matmul_spec
 from .ir import DataflowSpec
 from .scenarios import (decode_paged_spec, mlp_chain_spec, moe_ffn_spec,
-                        transformer_layer_spec)
+                        spec_decode_spec, transformer_layer_spec)
 
 MB = 2 ** 20
 
@@ -75,6 +75,12 @@ def build_suite(full: bool = False, n_cores: int = 16) -> List[SuiteCase]:
     cases.append(SuiteCase(
         "moe-ffn", moe_ffn_spec(moe, n_cores),
         SimConfig(n_cores=n_cores, llc_bytes=2 * MB),
+        expect_dbp_win=True))
+
+    spd = SpecDecodeWorkload(target_len=1024 if full else 512)
+    cases.append(SuiteCase(
+        "spec-decode", spec_decode_spec(spd, n_cores),
+        SimConfig(n_cores=n_cores, llc_bytes=(8 if full else 4) * MB),
         expect_dbp_win=True))
 
     cases.append(SuiteCase(

@@ -3,7 +3,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 # --- multi-pod dry-run: lower + compile every (arch × shape × mesh) cell ---
 # The two lines above MUST run before any other import (jax locks the
-# device count at first init).  See DESIGN.md §5 / EXPERIMENTS.md §Dry-run.
+# device count at first init).  See DESIGN.md §9 / EXPERIMENTS.md §Dry-run.
 
 import argparse          # noqa: E402
 import json              # noqa: E402

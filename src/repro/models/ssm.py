@@ -115,7 +115,7 @@ def mamba2_block(params, x, spec, cache: Optional[Mamba2Cache] = None
 
     The z/x/dt projections are head-sharded (TP over ``model``) while the
     small B/C projections stay replicated — this keeps every downstream
-    split aligned with shard boundaries (DESIGN.md §5).
+    split aligned with shard boundaries (DESIGN.md §9).
 
     Train/prefill mode (cache is None or full-seq with returned cache) and
     single-token decode mode (S == 1 with cache) share parameters.

@@ -185,6 +185,29 @@ def test_property_stats_conservation(lines):
     assert s["cold_misses"] == len(seen) >= 1
 
 
+def test_gear_window_advances_in_whole_multiples():
+    """A late tick must not stretch the next feedback window: the window
+    start advances by whole ``window_cycles`` multiples, never snaps to
+    ``now_cycles`` (the drift skewed every subsequent eviction *rate*)."""
+    from repro.core.policies import GearController
+
+    cfg = named_policy("at+bypass", window_cycles=100)
+    gc = GearController(1, cfg)
+    gc.record(np.zeros(50, dtype=np.int64), np.ones(50, dtype=bool))
+    gc.tick(150.0)                     # closes the [0, 100) window late
+    assert gc._window_start == 100.0   # not 150.0
+    assert gc.gear[0] == 1             # rate 1.0 > ub → gear up
+    # the next window closes at 200, unaffected by the 50-cycle overshoot
+    gc.record(np.zeros(10, dtype=np.int64), np.ones(10, dtype=bool))
+    gc.tick(199.0)
+    assert gc._window_start == 100.0 and gc.gear[0] == 1
+    gc.tick(205.0)
+    assert gc._window_start == 200.0 and gc.gear[0] == 2
+    # a very late tick skips whole windows, landing on a boundary
+    gc.tick(565.0)
+    assert gc._window_start == 500.0
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.integers(min_value=0, max_value=8))
 def test_property_gear_zero_equals_at(gear):

@@ -8,14 +8,15 @@ import pytest
 from _reference_builders import (build_fa2_trace_ref, build_matmul_trace_ref,
                                  fa2_counts_ref)
 from repro.core import (DecodeWorkload, MoEWorkload, SimConfig,
-                        build_fa2_trace, build_matmul_trace, fa2_counts,
-                        named_policy, predict, run_policies, run_policy)
+                        SpecDecodeWorkload, build_fa2_trace,
+                        build_matmul_trace, fa2_counts, named_policy,
+                        predict, run_policies, run_policy)
 from repro.core.workloads import SPATIAL, TEMPORAL, AttnWorkload, get_workload
 from repro.dataflows import (SUITE_POLICIES, build_suite, decode_paged_spec,
                              fa2_spec, lower_to_counts, lower_to_plan,
                              lower_to_trace, matmul_spec, mlp_chain_spec,
-                             moe_ffn_spec, suite_case, tmu_metadata,
-                             transformer_layer_spec)
+                             moe_ffn_spec, spec_decode_spec, suite_case,
+                             tmu_metadata, transformer_layer_spec)
 from repro.dataflows.ir import SpecBuilder
 
 TINY_T = AttnWorkload("tiny-t", 8, 4, 128, 1024, group_alloc=TEMPORAL)
@@ -33,6 +34,8 @@ MINI_DECODE = DecodeWorkload(n_seqs=8, seq_len=1024, n_steps=4,
 MINI_MOE = MoEWorkload(n_experts=8, n_hot=4, d_model=256, d_ff=256,
                        tile_bytes=8192, n_steps=6, warm_steps=2)
 MOE_CFG = SimConfig(n_cores=8, llc_bytes=256 * 1024, llc_slices=8)
+MINI_SPECDEC = SpecDecodeWorkload(n_seqs=4, target_len=384, draft_len=128,
+                                  gamma=2, n_verify=3)
 
 
 def assert_traces_identical(ref, got):
@@ -135,6 +138,7 @@ def _all_specs():
         mlp_chain_spec(m=512, dims=(256, 256, 256, 256), n_cores=4),
         transformer_layer_spec(AttnWorkload("tl", 4, 2, 128, 512),
                                d_ff=512, n_cores=4),
+        spec_decode_spec(MINI_SPECDEC, 4),
     ]
 
 
@@ -178,6 +182,7 @@ SCENARIOS = {
     "transformer-layer": (
         lambda: transformer_layer_spec(AttnWorkload("tl", 4, 2, 128, 512),
                                        d_ff=512, n_cores=4), CFG4),
+    "spec-decode": (lambda: spec_decode_spec(MINI_SPECDEC, 4), CFG4),
 }
 
 
@@ -209,6 +214,7 @@ def test_scenario_analytical_model_runs(key):
 @pytest.mark.parametrize("key,build,cfg", [
     ("decode", lambda: decode_paged_spec(MINI_DECODE, 4), CFG4),
     ("moe", lambda: moe_ffn_spec(MINI_MOE, 8), MOE_CFG),
+    ("specdec", lambda: spec_decode_spec(MINI_SPECDEC, 4), CFG4),
 ])
 def test_dbp_beats_lru_on_retirement_scenarios(key, build, cfg):
     """The acceptance property of §VI-F transplanted to the new
@@ -336,9 +342,12 @@ def test_suite_registry_complete_and_unique():
     keys = [c.key for c in cases]
     assert len(set(keys)) == len(keys)
     for expected in ("fa2-temporal", "fa2-spatial", "matmul",
-                     "decode-paged", "moe-ffn", "mlp-chain",
-                     "transformer-layer"):
+                     "decode-paged", "moe-ffn", "spec-decode",
+                     "mlp-chain", "transformer-layer"):
         assert expected in keys
+    # the speculative-decoding case exists to demonstrate the recurring
+    # two-epoch DBP win — keep it flagged for the suite_bench emit line
+    assert next(c for c in cases if c.key == "spec-decode").expect_dbp_win
     assert "lru" in SUITE_POLICIES and "at+dbp" in SUITE_POLICIES
     with pytest.raises(KeyError, match="unknown suite scenario"):
         suite_case("not-a-scenario")

@@ -13,10 +13,11 @@ from repro.core.orchestrator import CacheOrchestrator
 from repro.core.tmu import TMU, TMUParams, TensorMeta
 from repro.core.traces import fa2_counts
 from repro.core.workloads import (SPATIAL, TEMPORAL, AttnWorkload,
-                                  DecodeWorkload, MoEWorkload)
+                                  DecodeWorkload, MoEWorkload,
+                                  SpecDecodeWorkload)
 from repro.dataflows import (decode_paged_spec, fa2_spec, lower_to_counts,
                              lower_to_trace, matmul_spec, mlp_chain_spec,
-                             moe_ffn_spec)
+                             moe_ffn_spec, spec_decode_spec)
 from repro.launch.roofline import _shape_bytes, _wire_factor, param_count
 
 
@@ -104,7 +105,8 @@ def test_prediction_positive_and_counts_consistent(seq, kv, alloc):
 # hand-synced twins.
 # ---------------------------------------------------------------------------
 def _random_spec(draw):
-    kind = draw(st.sampled_from(["fa2", "matmul", "decode", "moe", "mlp"]))
+    kind = draw(st.sampled_from(["fa2", "matmul", "decode", "moe", "mlp",
+                                 "specdec"]))
     n_cores = draw(st.sampled_from([2, 4]))
     if kind == "fa2":
         kv = draw(st.sampled_from([1, 2, 4]))
@@ -132,6 +134,14 @@ def _random_spec(draw):
                          d_ff=128, tile_bytes=4096, n_steps=3,
                          warm_steps=draw(st.sampled_from([1, 2])))
         return moe_ffn_spec(wl, n_cores)
+    if kind == "specdec":
+        wl = SpecDecodeWorkload(
+            n_seqs=n_cores * draw(st.sampled_from([1, 2])),
+            target_len=draw(st.sampled_from([256, 512])),
+            draft_len=draw(st.sampled_from([128, 256])),
+            gamma=draw(st.integers(1, 3)),
+            n_verify=draw(st.integers(1, 3)))
+        return spec_decode_spec(wl, n_cores)
     dims = tuple(128 * draw(st.integers(1, 2)) for _ in range(4))
     return mlp_chain_spec(m=256, dims=dims, tile=128, n_cores=n_cores)
 
@@ -165,6 +175,29 @@ def test_ir_trace_totals_equal_closed_form_counts(data):
                 walked[names[tid]][1] += \
                     trace.tensors[tid].tile_bytes // trace.line_bytes
     assert per == {k: tuple(v) for k, v in walked.items()}
+
+
+# ---------------------------------------------------------------------------
+# Reuse-profile invariant: for every spec the suite can produce, the
+# profile lowering's total reuse mass equals the closed-form counts'
+# temporal + inter-core reuse (and cold / bypass / flops totals agree) —
+# the §V-C scalars are marginals of the reuse-distance histogram.
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_profile_reuse_mass_equals_closed_form_counts(data):
+    spec = _random_spec(data.draw)
+    counts = lower_to_counts(spec)
+    prof = counts.reuse_profile
+    assert (prof.total_reuse_mass()
+            == counts.n_temporal_reuse + counts.n_intercore_reuse)
+    assert prof.footprint_lines() == counts.n_kv_distinct
+    assert (int(prof.byp_cold_round.sum() + prof.byp_rep_round.sum())
+            == counts.n_bypass_lines)
+    assert float(prof.flops_round.sum()) == counts.flops_total
+    # live+dead split partitions every distance; MSHR mass is distance 0
+    assert (prof.e_dlive >= 0).all() and (prof.e_ddead >= 0).all()
+    assert int((prof.e_dlive + prof.e_ddead)[prof.e_mshr].sum()) == 0
 
 
 # ---------------------------------------------------------------------------
