@@ -50,6 +50,7 @@ def _sweep_case(case, table, fit_points):
             "hit_rate": res.hit_rate,
             "speedup_vs_lru": base / res.cycles,
             "dead_evictions": res.dead_evictions,
+            "writebacks": res.writebacks,
         }
         fit_points.append((f"{case.key}-{pol}",
                            (counts, case.cfg.llc_bytes, pol, "optimal",
@@ -66,9 +67,13 @@ def _record_errors(table, fit_points, hw, params, model, col):
             in fit_points:
         row = table[row_key]
         pred = predict(counts, llc, pol, hw, params, variant, gqa,
-                       n_rounds=rounds, model=model).cycles
-        row[f"model_cycles_{col}"] = pred
-        row[f"model_rel_err_{col}"] = abs(pred - target) / target
+                       n_rounds=rounds, model=model)
+        row[f"model_cycles_{col}"] = pred.cycles
+        row[f"model_rel_err_{col}"] = abs(pred.cycles - target) / target
+        if model == "profile" and not col.startswith("loso"):
+            # dirty-lifetime term: predicted write-back line volume next
+            # to the simulator's (closed forms carry no such term)
+            row["model_writebacks"] = pred.n_wb
         errs.setdefault(row["scenario"], []).append(
             row[f"model_rel_err_{col}"])
     return {k: float(np.mean(v)) for k, v in errs.items()}

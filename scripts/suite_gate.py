@@ -7,7 +7,13 @@ scenario or the full suite):
 * the reuse-profile model's mean relative error is no worse than the
   closed-form model's (the PR-3 accuracy win is regression-gated);
 * every DBP-win scenario in the report still beats plain LRU under
-  ``at+dbp`` (speedup > 1.0).
+  ``at+dbp`` (speedup > 1.0), and every scenario this gate *expects* to
+  be a DBP win (``EXPECTED_DBP_WINS``) is still flagged as one when it
+  appears in the report — deregistering ``expect_dbp_win`` on a
+  scenario cannot silently disable its gate;
+* the ``ssd-scan`` DBP win clears a regression margin
+  (``SSD_SCAN_MIN_DBP``): the chunk-state retirement pattern is the
+  scenario's reason to exist.
 
 Run it immediately after each ``benchmarks.suite_bench`` invocation —
 the benchmark always writes ``reports/benchmarks/suite_bench.json``, so
@@ -18,6 +24,11 @@ import json
 import sys
 
 import numpy as np
+
+#: scenarios whose at+dbp-vs-lru win is part of their contract
+EXPECTED_DBP_WINS = ("decode-paged", "moe-ffn", "spec-decode", "ssd-scan")
+#: regression margin for the ssd-scan chunk-state win (measured 1.24x)
+SSD_SCAN_MIN_DBP = 1.10
 
 path = sys.argv[1] if len(sys.argv) > 1 else \
     "reports/benchmarks/suite_bench.json"
@@ -37,11 +48,18 @@ if prof > max(closed, ABS_OK):
     sys.exit(f"reuse-profile model regressed on {scenarios}: mean rel "
              f"err {prof:.3f} > closed-form {closed:.3f} (and > {ABS_OK})")
 
-for key in report.get("dbp_win_scenarios", []):
+flagged = report.get("dbp_win_scenarios", [])
+for key in scenarios:
+    if key in EXPECTED_DBP_WINS and key not in flagged:
+        sys.exit(f"{key}: expected DBP-win scenario is no longer flagged "
+                 f"expect_dbp_win in the suite registry")
+for key in flagged:
     dbp = report["rows"][f"{key}-at+dbp"]["speedup_vs_lru"]
     if not dbp > 1.0:
         sys.exit(f"{key}: DBP win over LRU lost ({dbp:.3f}x)")
+    if key == "ssd-scan" and dbp < SSD_SCAN_MIN_DBP:
+        sys.exit(f"ssd-scan: chunk-state DBP win regressed "
+                 f"({dbp:.3f}x < {SSD_SCAN_MIN_DBP}x)")
 
 print(f"suite gate OK on {scenarios}: profile {prof:.3f} <= "
-      f"max(closed {closed:.3f}, {ABS_OK}); dbp wins "
-      f"{report.get('dbp_win_scenarios', [])}")
+      f"max(closed {closed:.3f}, {ABS_OK}); dbp wins {flagged}")

@@ -1,8 +1,9 @@
 """DCO core: TMU, shared-LLC policies, cycle-level simulator, analytical
 model, and the TPU-side cache orchestrator."""
 
-from .analytical import (ModelParams, Prediction, fit_params, kendall_tau,
-                         kept_fraction, predict, r_squared)
+from .analytical import (ModelParams, Prediction, fit_params,
+                         gear_trajectory, kendall_tau, kept_fraction,
+                         predict, r_squared)
 from .cache import CacheGeometry, SharedLLC
 from .orchestrator import CacheOrchestrator, OrchestrationPlan
 from .policies import PolicyConfig, named_policy
@@ -12,12 +13,12 @@ from .tmu import TMU, DeadFIFO, TMUParams, TensorMeta
 from .traces import (CompiledTrace, DataflowCounts, Step, Trace,
                      build_fa2_trace, build_matmul_trace, fa2_counts)
 from .workloads import (PAPER_WORKLOADS, SPATIAL, TEMPORAL, AttnWorkload,
-                        DecodeWorkload, MoEWorkload, SpecDecodeWorkload,
-                        get_workload)
+                        DecodeWorkload, MoEWorkload, PrefixShareWorkload,
+                        SpecDecodeWorkload, SSDScanWorkload, get_workload)
 
 __all__ = [
-    "ModelParams", "Prediction", "fit_params", "kendall_tau",
-    "kept_fraction", "predict", "r_squared",
+    "ModelParams", "Prediction", "fit_params", "gear_trajectory",
+    "kendall_tau", "kept_fraction", "predict", "r_squared",
     "CacheGeometry", "SharedLLC",
     "CacheOrchestrator", "OrchestrationPlan",
     "PolicyConfig", "named_policy",
@@ -26,5 +27,6 @@ __all__ = [
     "CompiledTrace", "DataflowCounts", "Step", "Trace", "build_fa2_trace",
     "build_matmul_trace", "fa2_counts",
     "PAPER_WORKLOADS", "SPATIAL", "TEMPORAL", "AttnWorkload",
-    "DecodeWorkload", "MoEWorkload", "SpecDecodeWorkload", "get_workload",
+    "DecodeWorkload", "MoEWorkload", "PrefixShareWorkload",
+    "SpecDecodeWorkload", "SSDScanWorkload", "get_workload",
 ]

@@ -19,7 +19,16 @@ Two hit-estimation engines share the paper's Eq. 1–5 time machinery:
   - **Bypass gear g** deletes the lowest ``g`` tiers' mass (their
     reuses miss — including inter-core reuses, the §IV-E failure mode)
     and shrinks everyone else's distances by the deleted fraction;
-    dynamic bypassing is its upper bound, the best static gear (§V-A).
+    dynamic bypassing replays the §IV-D feedback law window by window
+    (:func:`gear_trajectory`) and charges each round at its transient
+    gear instead of assuming the converged one.
+  - **Dirty lifetimes**: a stored tile writes back when it is evicted
+    while dirty.  P(dirty) chains along each tile's access sequence
+    (store → dirty; miss → the eviction wrote it back and reloads
+    clean; hit → dirty persists) and still-dirty tiles age out via
+    their tail distance — the same distance-vs-capacity rule as hits,
+    so every mechanism's effect on write-back volume falls out of its
+    profile transform.
   - MSHR-merge mass (distance 0) always hits, under every policy.
 
 * ``model="closed"`` — the original §V-C scalar step functions
@@ -82,6 +91,10 @@ class Prediction:
     n_cold: float
     n_cf: float
     kept_fraction: float
+    #: predicted dirty-eviction (write-back) line volume; the profile
+    #: engine's dirty-lifetime model fills it, the closed forms carry no
+    #: write-back term and leave it 0
+    n_wb: float = 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -148,31 +161,34 @@ def parse_model_policy(policy: str) -> Tuple[bool, bool, bool]:
             "bypass" in policy or policy == "all")
 
 
-def _gear_candidates(bypass: bool, variant: str, gqa: bool,
-                     b_bits: int) -> Tuple[int, ...]:
-    """Gears to evaluate: none → gear 0; static fixN → that gear; the
-    conservative gqa variant bypasses nothing the model credits (§IV-E);
-    dynamic ("optimal") → every gear, the paper's upper-bound treatment."""
+def _static_gear(bypass: bool, variant: str, gqa: bool) -> int:
+    """Gear for the non-emulated paths: none → gear 0; static fixN →
+    that gear; the conservative gqa variant bypasses nothing the model
+    credits (§IV-E).  Dynamic bypassing does not reduce to one gear —
+    it runs the window-by-window trajectory (:func:`_gear_trajectory`)."""
     if not bypass or gqa:
-        return (0,)
-    if variant.startswith("fix"):
-        return (int(variant[3:]),)
-    return tuple(range((1 << b_bits) + 1))
+        return 0
+    return int(variant[3:])
 
 
-def _hit_prob(d: np.ndarray, lo: float, hi: float) -> np.ndarray:
+def _hit_prob(d: np.ndarray, lo, hi) -> np.ndarray:
     """Set-associative capacity ramp: certain hit up to ``lo`` =
     ``C·(A-1)/A`` stack lines, certain miss past ``hi`` = ``C·(A+1)/A``,
     linear in between (hashed set mapping spreads a burst binomially
     over sets, so the all-or-nothing step of the closed forms becomes a
-    band around the capacity)."""
-    if hi <= lo:
-        return (d <= lo).astype(float)
-    return np.clip((hi - d) / (hi - lo), 0.0, 1.0)
+    band around the capacity).  ``lo``/``hi`` may be per-element arrays
+    (the gear-trajectory path evaluates each access under the band of
+    its own round's gear)."""
+    lo = np.asarray(lo, dtype=float)
+    hi = np.asarray(hi, dtype=float)
+    span = hi - lo
+    safe = np.where(span > 0, span, 1.0)
+    p = np.clip((hi - d) / safe, 0.0, 1.0)
+    return np.where(span > 0, p, (d <= lo).astype(float))
 
 
 def _profile_outcome(prof, llc_bytes: int, assoc: int, at: bool, dbp: bool,
-                     gear: int, b_bits: int) -> dict:
+                     gear, b_bits: int) -> dict:
     """Per-round request-class masses under one transformed profile.
 
     The single evaluation rule: a reuse entry hits with the probability
@@ -181,8 +197,22 @@ def _profile_outcome(prof, llc_bytes: int, assoc: int, at: bool, dbp: bool,
     that comparison.  Cached on the profile per (geometry, mechanism)
     key — θ/λ only enter the time aggregation, so calibration reuses
     these aggregates.
+
+    ``gear`` is either a scalar (one gear everywhere — the static and
+    converged cases) or a per-round int array from the §IV-D trajectory
+    emulation.  The per-round form is *residency-aware*: bypass
+    decisions happen at fill time, so an access to a currently-bypassed
+    tier still hits if the gear **at its previous access** admitted the
+    fill — exactly the transient population a gear ramp leaves resident
+    (and the reason a converged-gear model overstates bypass losses).
     """
-    key = (llc_bytes, assoc, at, dbp, gear, b_bits)
+    nr = prof.n_rounds
+    if np.ndim(gear) == 0:
+        g_r = np.full(nr, int(gear), dtype=np.int64)
+        key = (llc_bytes, assoc, at, dbp, int(gear), b_bits)
+    else:
+        g_r = np.asarray(gear, dtype=np.int64)
+        key = (llc_bytes, assoc, at, dbp, g_r.tobytes(), b_bits)
     out = prof._eval_cache.get(key)
     if out is not None:
         return out
@@ -203,72 +233,169 @@ def _profile_outcome(prof, llc_bytes: int, assoc: int, at: bool, dbp: bool,
         # dead generations retire on the fly: only the peak live stack
         # competes for capacity, spread over the tiers proportionally
         fp = fp * (prof.max_live_lines / total_fp)
-
-    # --- bypass transform: lowest `gear` tiers never allocate ----------
-    surv_tier = np.arange(n_tiers) >= gear
-    fp_surv = np.where(surv_tier, fp, 0.0)
-    W = float(fp_surv.sum())
     stack_total = float(fp.sum())
-    bypassed = (e_prio < gear) & ~prof.e_mshr
+
+    # per-gear transform tables (bypass survivors, anti-thrashing
+    # protection, distance shrink); a trajectory indexes them per access
+    max_g = 1 << b_bits
+    prot_tab = np.zeros((max_g + 1, n_tiers), dtype=bool)
+    frac_tab = np.ones(max_g + 1)       # at: unprotected-distance scale
+    lo_tab = np.full(max_g + 1, c_lo)
+    hi_tab = np.full(max_g + 1, c_hi)
+    shrink_tab = np.ones(max_g + 1)     # no-at: deleted-fraction scale
+    order = np.arange(n_tiers - 1, -1, -1)
+    for g in np.unique(g_r).tolist():
+        surv = np.arange(n_tiers) >= g
+        fp_surv = np.where(surv, fp, 0.0)
+        W = float(fp_surv.sum())
+        if at:
+            # protect the top tiers whose footprint fits (§IV-C)
+            cum = np.cumsum(fp_surv[order])
+            prot = np.zeros(n_tiers, dtype=bool)
+            prot[order[cum <= c_lo]] = True
+            prot &= surv
+            prot_mass = float(fp_surv[prot].sum())
+            prot_tab[g] = prot
+            frac_tab[g] = ((W - prot_mass) / stack_total) \
+                if stack_total else 0.0
+            lo_tab[g] = max(c_lo - prot_mass, 0.0)
+            hi_tab[g] = max(c_hi - prot_mass, 1.0)
+        else:
+            shrink_tab[g] = (W / stack_total) if stack_total else 1.0
+
+    e_gear = g_r[prof.e_round]
+    e_prev_gear = g_r[prof.e_prev_round]
+    # residency: the line's last fill allocated iff its tier survived
+    # the gear active *then* (with one gear everywhere this reduces to
+    # the plain "bypassed tiers never hit" transform)
+    not_resident = (e_prio < e_prev_gear) & ~prof.e_mshr
 
     # --- dbp transform: dead-epoch pollution leaves the stack ----------
     d = (prof.e_dlive if dbp else prof.e_dlive + prof.e_ddead).astype(float)
-
     if at:
-        # --- anti-thrashing transform: protect top tiers that fit -----
-        order = np.arange(n_tiers - 1, -1, -1)
-        cum = np.cumsum(fp_surv[order])
-        prot_tier = np.zeros(n_tiers, dtype=bool)
-        prot_tier[order[cum <= c_lo]] = True
-        prot_mass = float(fp_surv[prot_tier].sum())
-        frac_u = ((W - prot_mass) / stack_total) if stack_total else 0.0
-        protected = prot_tier[e_prio] & surv_tier[e_prio]
+        protected = prot_tab[e_gear, e_prio]
         p_hit = np.where(protected, 1.0,
-                         _hit_prob(d * frac_u, max(c_lo - prot_mass, 0.0),
-                                   max(c_hi - prot_mass, 1.0)))
+                         _hit_prob(d * frac_tab[e_gear], lo_tab[e_gear],
+                                   hi_tab[e_gear]))
     else:
-        shrink = (W / stack_total) if stack_total else 1.0
-        p_hit = _hit_prob(d * shrink, c_lo, c_hi)
-
-    p_hit = np.where(bypassed, 0.0, p_hit)
+        p_hit = _hit_prob(d * shrink_tab[e_gear], c_lo, c_hi)
+    p_hit = np.where(not_resident, 0.0, p_hit)
     p_hit = np.where(prof.e_mshr, 1.0, p_hit)
 
-    nr = prof.n_rounds
     w = prof.e_mass.astype(float)
     h_r = np.bincount(prof.e_round, weights=w * p_hit, minlength=nr)
     cf_reuse_r = np.bincount(prof.e_round, weights=w * (1.0 - p_hit),
                              minlength=nr)
     cold_r = (prof.cold_round + prof.byp_cold_round).astype(float)
     cf_r = cf_reuse_r + prof.byp_rep_round
-    # dirtied reuse-carrier lines write back when evicted: scale the
-    # dirty volume by the reuse-miss fraction (fits → stays resident)
     total_reuse = float(w.sum())
-    miss_frac = float(cf_reuse_r.sum()) / total_reuse if total_reuse else 0.0
-    wb_r = prof.wb_round * miss_frac
 
-    # feedback observable for the dynamic-gear controller emulation:
-    # evictions ≈ allocating misses beyond the warm-up fills (the first
-    # cap_lines allocations land in invalid ways and evict nothing;
-    # bypassed fills never allocate).  Fraction against the *current*
-    # (possibly dbp-rescaled) footprint — the rescale is uniform, so
-    # this is the true bypassed-tier share.
-    byp_fp_frac = (float(fp[:gear].sum()) / stack_total) if stack_total \
-        else 0.0
-    allocations = float((w * (1.0 - p_hit) * ~bypassed).sum()) \
-        + float(prof.cold_round.sum()) * (1.0 - byp_fp_frac)
-    evictions = max(allocations - cap_lines, 0.0)
-    requests = float(h_r.sum() + cold_r.sum() + cf_r.sum())
+    # --- dirty-lifetime write-back model (DESIGN.md §5) ----------------
+    # Chain each tile's accesses and propagate P(dirty): a store dirties
+    # the line (write-allocate, unless its fill is bypassed); a later
+    # access that *misses* under the profile's own hit rule means the
+    # line aged past capacity in between — if it was dirty, that
+    # eviction wrote it back (and the reload is clean).  A hit leaves
+    # the dirty bit in place.
+    alloc_now = e_prio >= e_gear          # this access's fill allocates
+    t_cold_gear = g_r[prof.t_cold_round]
+    t_last_gear = g_r[prof.t_last_round]
+    dirty0 = prof.t_cold_store & (t_prio >= t_cold_gear)
+    wb_list = [0.0] * nr
+    dl = dirty0.astype(float).tolist()
+    for t, r, m, s, p, a in zip(
+            prof.e_tile.tolist(), prof.e_round.tolist(),
+            prof.e_mass.tolist(), prof.e_store.tolist(),
+            p_hit.tolist(), alloc_now.tolist()):
+        dcur = dl[t]
+        if dcur > 0.0 and p < 1.0:
+            wb_list[r] += dcur * (1.0 - p) * m
+        # store: hit keeps residency (dirtied either way), miss
+        # re-allocates dirty only if the fill is admitted
+        dl[t] = (p + (1.0 - p) * a) if s else dcur * p
+    # tail: tiles still dirty at their last access write back iff the
+    # remaining schedule ages them past capacity — same transformed
+    # distance-vs-capacity rule as hits, under the gear of their final
+    # round.
+    dirty = np.asarray(dl)
+    d_tail_full = (prof.t_tail_dlive + prof.t_tail_ddead).astype(float)
+    d_tail = prof.t_tail_dlive.astype(float) if dbp else d_tail_full
+    if at:
+        prot_t = prot_tab[t_last_gear, t_prio]
+        p_surv = np.where(prot_t, 1.0,
+                          _hit_prob(d_tail * frac_tab[t_last_gear],
+                                    lo_tab[t_last_gear],
+                                    hi_tab[t_last_gear]))
+    else:
+        p_surv = _hit_prob(d_tail * shrink_tab[t_last_gear], c_lo, c_hi)
+    if dbp:
+        # retired tiles lose both stack recency and tier protection (the
+        # dead FIFO victimizes them first): their dirty lines survive
+        # only if the remaining schedule's raw traffic never fills the
+        # cache — the untransformed full distance against the plain band
+        p_surv = np.where(prof.t_dies,
+                          _hit_prob(d_tail_full, c_lo, c_hi), p_surv)
+    wb_tail = dirty * (1.0 - p_surv) * prof.t_mass
+    wb_r = np.asarray(wb_list)
+    np.add.at(wb_r, prof.t_last_round, wb_tail)
+
+    # feedback observables for the dynamic-gear controller emulation:
+    # per-round allocations (misses beyond bypass; the trajectory
+    # credits the first cap_lines fills as warm-up, which land in
+    # invalid ways and evict nothing) and per-round request totals
+    alloc_r = (np.bincount(prof.e_round,
+                           weights=w * (1.0 - p_hit) * alloc_now,
+                           minlength=nr)
+               + np.bincount(prof.t_cold_round,
+                             weights=prof.t_mass * (t_prio >= t_cold_gear),
+                             minlength=nr))
+    req_r = h_r + cold_r + cf_r
 
     out = {
         "h_r": h_r, "cold_r": cold_r, "cf_r": cf_r, "wb_r": wb_r,
+        "alloc_r": alloc_r, "req_r": req_r, "cap_lines": cap_lines,
         "n_hit": float(h_r.sum()), "n_cold": float(cold_r.sum()),
-        "n_cf": float(cf_r.sum()),
-        "evict_rate": evictions / requests if requests else 0.0,
+        "n_cf": float(cf_r.sum()), "n_wb": float(wb_r.sum()),
         "kept": float((w * p_hit).sum() / total_reuse)
         if total_reuse else 1.0,
     }
     prof._eval_cache[key] = out
     return out
+
+
+def _round_time_components(prof, outcome: dict, hw: SimConfig,
+                           params: ModelParams
+                           ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                      np.ndarray]:
+    """Per-round (t_hit, t_cold, t_cf, t_comp) arrays — Eq. 1–5 at the
+    simulator's round granularity, shared by the aggregate prediction and
+    the window-by-window gear-trajectory emulation."""
+    issue = hw.n_cores * hw.ipc_mem
+    v = hw.v_llc
+    bw = hw.dram_lines_per_cycle
+    h_r, cold_r = outcome["h_r"], outcome["cold_r"]
+    cf_r, wb_r = outcome["cf_r"], outcome["wb_r"]
+    flops_r = prof.flops_round
+
+    t_hit = np.maximum(h_r / issue, h_r / v)
+    t_cold = np.maximum(np.maximum(cold_r / issue, cold_r / v),
+                        cold_r / (params.theta1 * bw))
+    # Eq. 3 per round: conflict-demand density over the round's stream.
+    # Dirty evictions are dispersed DRAM traffic exactly like conflict
+    # misses (§V-B), so write-back volume counts toward the demand rate
+    # — without it a store-heavy round with few conflict misses would
+    # drain its write-backs at the θ2 floor.
+    n_mem = h_r + cold_r + cf_r
+    denom = n_mem / hw.ipc_mem + flops_r / hw.core_flops_per_cycle
+    eta = np.divide((cf_r + wb_r) / hw.ipc_mem, denom,
+                    out=np.zeros_like(cf_r), where=denom > 0)
+    v_dmd = np.minimum(eta * issue, v)
+    bw_cf = np.clip(params.lam * v_dmd, params.theta2 * bw,
+                    params.theta3 * bw)
+    t_cf = np.maximum(np.maximum(cf_r / issue, cf_r / v),
+                      (cf_r + wb_r) / bw_cf)
+    t_comp = flops_r / (hw.n_cores * hw.core_flops_per_cycle)
+    return t_hit, t_cold, t_cf, t_comp
 
 
 def _profile_prediction(prof, outcome: dict, hw: SimConfig,
@@ -280,28 +407,8 @@ def _profile_prediction(prof, outcome: dict, hw: SimConfig,
     closed path's parameter does; by default the profile's own round
     count is charged.
     """
-    issue = hw.n_cores * hw.ipc_mem
-    v = hw.v_llc
-    bw = hw.dram_lines_per_cycle
-    h_r, cold_r = outcome["h_r"], outcome["cold_r"]
-    cf_r, wb_r = outcome["cf_r"], outcome["wb_r"]
-    flops_r = prof.flops_round
-
-    t_hit = np.maximum(h_r / issue, h_r / v)
-    t_cold = np.maximum(np.maximum(cold_r / issue, cold_r / v),
-                        cold_r / (params.theta1 * bw))
-    # Eq. 3 per round: conflict-demand density over the round's stream
-    n_mem = h_r + cold_r + cf_r
-    denom = n_mem / hw.ipc_mem + flops_r / hw.core_flops_per_cycle
-    eta = np.divide(cf_r / hw.ipc_mem, denom,
-                    out=np.zeros_like(cf_r), where=denom > 0)
-    v_dmd = np.minimum(eta * issue, v)
-    bw_cf = np.clip(params.lam * v_dmd, params.theta2 * bw,
-                    params.theta3 * bw)
-    t_cf = np.maximum(np.maximum(cf_r / issue, cf_r / v),
-                      (cf_r + wb_r) / bw_cf)
-    t_comp = flops_r / (hw.n_cores * hw.core_flops_per_cycle)
-
+    t_hit, t_cold, t_cf, t_comp = _round_time_components(prof, outcome,
+                                                         hw, params)
     overhead_rounds = prof.n_rounds if n_rounds is None else n_rounds
     cycles = float((t_hit + t_cold + np.maximum(t_comp, t_cf)).sum()) \
         + params.round_overhead * overhead_rounds
@@ -309,7 +416,110 @@ def _profile_prediction(prof, outcome: dict, hw: SimConfig,
         cycles=cycles, t_hit=float(t_hit.sum()), t_cold=float(t_cold.sum()),
         t_cf=float(t_cf.sum()), t_comp=float(t_comp.sum()),
         n_hit=outcome["n_hit"], n_cold=outcome["n_cold"],
-        n_cf=outcome["n_cf"], kept_fraction=outcome["kept"])
+        n_cf=outcome["n_cf"], kept_fraction=outcome["kept"],
+        n_wb=outcome.get("n_wb", 0.0))
+
+
+def _gear_trajectory(prof, llc_bytes: int, hw: SimConfig,
+                     params: ModelParams, at: bool, dbp: bool,
+                     b_bits: int, pcfg=None
+                     ) -> Tuple[np.ndarray, dict]:
+    """Window-by-window emulation of the §IV-D dynamic-gear feedback law.
+
+    Instead of assuming the converged gear everywhere, the trajectory
+    replays the controller: per feedback window (``window_cycles`` of
+    *modeled* time), the predicted eviction rate — allocations beyond
+    the warm-up fill credit over requests — moves the gear one step up
+    when it exceeds ``bypass_ub``, and one step down only after
+    ``down_streak`` consecutive low-rate windows (the fast-up /
+    slow-down hysteresis).  Each round's request classes are charged at
+    the gear active *during that round*, so the ramp-up transient before
+    equilibrium (the residual error on ``at+bypass`` rows the converged
+    pick left) is part of the prediction.  The emulated trajectory is
+    validated against ``SimResult.history["gear"]``.
+
+    Returns ``(gear_per_round, composite_outcome)`` where the composite
+    outcome mixes each round's masses from the per-gear steady-state
+    outcomes along the trajectory.
+    """
+    if pcfg is None:
+        from .policies import PolicyConfig
+        pcfg = PolicyConfig()
+    nr = prof.n_rounds
+    assoc = hw.llc_assoc
+    max_gear = 1 << b_bits
+    outs: Dict[int, dict] = {}
+    cum_t: Dict[int, np.ndarray] = {}
+    cum_alloc_g: Dict[int, np.ndarray] = {}
+    cum_req_g: Dict[int, np.ndarray] = {}
+
+    def outcome(g: int) -> dict:
+        o = outs.get(g)
+        if o is None:
+            o = outs[g] = _profile_outcome(prof, llc_bytes, assoc, at, dbp,
+                                           g, b_bits)
+            th, tc, tcf, tcomp = _round_time_components(prof, o, hw, params)
+            cum_t[g] = np.cumsum(th + tc + np.maximum(tcomp, tcf)
+                                 + params.round_overhead)
+            cum_alloc_g[g] = np.cumsum(o["alloc_r"])
+            cum_req_g[g] = np.cumsum(o["req_r"])
+        return o
+
+    cap = float(outcome(pcfg.b_gear)["cap_lines"])
+    gear = pcfg.b_gear
+    clock = win_start = 0.0
+    ev = acc = cum_alloc = 0.0
+    streak = 0
+    g_r = np.zeros(nr, dtype=np.int64)
+    r = 0
+    while r < nr:
+        outcome(gear)
+        ct, ca, cq = cum_t[gear], cum_alloc_g[gear], cum_req_g[gear]
+        base_t = ct[r - 1] if r else 0.0
+        # first round whose end crosses the current window boundary
+        j = int(np.searchsorted(ct, win_start + pcfg.window_cycles
+                                - clock + base_t))
+        j = min(j, nr - 1)
+        g_r[r:j + 1] = gear
+        base = r - 1
+        chunk_alloc = ca[j] - (ca[base] if r else 0.0)
+        # warm-up fill credit: the first cap allocations land in invalid
+        # ways and evict nothing (mirrors the simulator's cold start)
+        ev += max(cum_alloc + chunk_alloc - max(cap, cum_alloc), 0.0)
+        cum_alloc += chunk_alloc
+        acc += cq[j] - (cq[base] if r else 0.0)
+        clock += ct[j] - base_t
+        r = j + 1
+        elapsed = clock - win_start
+        if elapsed >= pcfg.window_cycles:
+            # one gear step per crossing, then advance in whole window
+            # multiples — GearController.tick is invoked once per round
+            # and moves one step at most, so a round spanning several
+            # windows ramps exactly one step there too
+            rate = ev / max(acc, 1.0)
+            if rate > pcfg.bypass_ub:
+                gear = min(gear + 1, max_gear)
+                streak = 0
+            elif rate < pcfg.bypass_lb:
+                streak += 1
+                if streak >= pcfg.down_streak:
+                    gear = max(gear - 1, 0)
+                    streak = 0
+            else:
+                streak = 0
+            ev = acc = 0.0
+            win_start += (elapsed // pcfg.window_cycles) \
+                * pcfg.window_cycles
+
+    # composite outcome: every access re-evaluated under the gear of its
+    # own round, residency-aware across gear changes (an access whose
+    # tier the *current* gear bypasses still hits if its last fill was
+    # admitted under a lower transient gear) — cached per trajectory
+    used = np.unique(g_r)
+    if used.shape[0] == 1:
+        return g_r, outcome(int(used[0]))
+    return g_r, _profile_outcome(prof, llc_bytes, assoc, at, dbp, g_r,
+                                 b_bits)
 
 
 def _predict_profile(counts: DataflowCounts, llc_bytes: int, policy: str,
@@ -320,33 +530,47 @@ def _predict_profile(counts: DataflowCounts, llc_bytes: int, policy: str,
     at, dbp, bypass = parse_model_policy(policy)
     if bypass and bypass_variant.startswith("fix"):
         at = True          # static gears run with at enabled (§VI-E)
-    gears = _gear_candidates(bypass, bypass_variant, gqa, b_bits)
-    if len(gears) > 1:
-        # dynamic bypassing: emulate the per-slice feedback law (§IV-D)
-        # instead of assuming the best-case gear — the controller raises
-        # the gear until the eviction rate drops under its upper bound,
-        # so it converges to the *smallest* such gear (and to max gear
-        # when no gear tames the rate), even when that over-bypasses and
-        # destroys inter-core reuse (the §IV-E failure the gqa variant
-        # exists to avoid).
-        from .policies import PolicyConfig
-        ub = PolicyConfig().bypass_ub
-        chosen = gears[-1]
-        for gear in gears:
-            rate = _profile_outcome(prof, llc_bytes, hw.llc_assoc, at, dbp,
-                                    gear, b_bits)["evict_rate"]
-            if rate <= ub:
-                chosen = gear
-                break
-        gears = (chosen,)
-    best: Optional[Prediction] = None
-    for gear in gears:
-        outcome = _profile_outcome(prof, llc_bytes, hw.llc_assoc, at, dbp,
-                                   gear, b_bits)
-        pred = _profile_prediction(prof, outcome, hw, params, n_rounds)
-        if best is None or pred.cycles < best.cycles:
-            best = pred
-    return best
+    if bypass and not gqa and not bypass_variant.startswith("fix"):
+        # dynamic bypassing: replay the per-window feedback law (§IV-D)
+        # round by round — the controller ramps the gear until the
+        # eviction rate drops under its upper bound, and the pre-
+        # equilibrium windows run (and are charged) at their lower
+        # transient gears, even when the converged gear over-bypasses
+        # and destroys inter-core reuse (the §IV-E failure the gqa
+        # variant exists to avoid).
+        _, outcome = _gear_trajectory(prof, llc_bytes, hw, params, at, dbp,
+                                      b_bits)
+        return _profile_prediction(prof, outcome, hw, params, n_rounds)
+    gear = _static_gear(bypass, bypass_variant, gqa)
+    outcome = _profile_outcome(prof, llc_bytes, hw.llc_assoc, at, dbp,
+                               gear, b_bits)
+    return _profile_prediction(prof, outcome, hw, params, n_rounds)
+
+
+def gear_trajectory(counts: DataflowCounts, llc_bytes: int,
+                    policy: str = "at+bypass",
+                    hw: Optional[SimConfig] = None,
+                    params: Optional[ModelParams] = None,
+                    b_bits: int = 3, policy_cfg=None) -> np.ndarray:
+    """Emulated per-round gear trajectory of the §IV-D feedback law.
+
+    The validation-facing entry point: rounds with no requests keep the
+    gear of the preceding window, matching where the simulator skips
+    its controller tick.  Compare against the per-round mean gear the
+    simulator records in ``SimResult.history["gear"]`` (which omits the
+    empty rounds)."""
+    hw = hw or SimConfig()
+    params = params or ModelParams()
+    prof = counts.reuse_profile
+    if prof is None:
+        raise ValueError("counts carry no reuse profile "
+                         "(lower_to_counts(with_profile=True))")
+    at, dbp, bypass = parse_model_policy(policy)
+    if not bypass:
+        raise ValueError(f"policy {policy!r} does not bypass")
+    g_r, _ = _gear_trajectory(prof, llc_bytes, hw, params, at, dbp,
+                              b_bits, policy_cfg)
+    return g_r
 
 
 # ---------------------------------------------------------------------------
@@ -375,10 +599,13 @@ def predict(counts: DataflowCounts, llc_bytes: int, policy: str,
         return _predict_profile(counts, llc_bytes, policy, hw, params,
                                 bypass_variant, gqa, b_bits, n_rounds)
 
+    # dead data of retired batches pollutes every policy that does not
+    # predict dead blocks (§VI-F); "all" names its mechanisms implicitly
+    # but its closed-form treatment keeps the polluted stack, so the
+    # substring test is the behavior-defining check for every policy in
+    # ``_KNOWN_POLICIES`` (pinned by tests/test_analytical.py)
     pollution = 1.0
-    if counts.n_batches > 1 and policy == "lru":
-        pollution = 1.0 / counts.n_batches
-    if counts.n_batches > 1 and "dbp" not in policy and policy != "lru":
+    if counts.n_batches > 1 and "dbp" not in policy:
         pollution = 1.0 / counts.n_batches
 
     f = kept_fraction(policy, counts.s_work_active, llc_bytes,
@@ -500,6 +727,12 @@ def r_squared(pred: np.ndarray, target: np.ndarray) -> float:
 
 
 def kendall_tau(pred: np.ndarray, target: np.ndarray) -> float:
+    """Kendall's τ-b (tie-adjusted): tied pairs leave the numerator but
+    also shrink the denominator, ``sqrt((n0-n1)(n0-n2))`` with ``n1``/
+    ``n2`` the pairs tied in each input — the paper's §VI-G1 τ = 0.934
+    is a τ-b figure.  (The τ-a denominator ``n(n-1)/2`` biases τ low
+    whenever predictions tie, e.g. two policies collapsing to the same
+    predicted cycles.)"""
     pred = np.asarray(pred, dtype=float)
     target = np.asarray(target, dtype=float)
     n = pred.shape[0]
@@ -511,5 +744,12 @@ def kendall_tau(pred: np.ndarray, target: np.ndarray) -> float:
     s = dp[iu] * dt[iu]
     concordant = float((s > 0).sum())
     discordant = float((s < 0).sum())
-    denom = n * (n - 1) / 2
+    n0 = n * (n - 1) / 2
+    n1 = float((dp[iu] == 0).sum())
+    n2 = float((dt[iu] == 0).sum())
+    denom = math.sqrt((n0 - n1) * (n0 - n2))
+    if denom == 0.0:
+        # at least one input is constant: perfect agreement only if both
+        # are (no orderable pair disagrees), else no rank information
+        return 1.0 if n1 == n2 == n0 else 0.0
     return (concordant - discordant) / denom

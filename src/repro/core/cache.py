@@ -177,14 +177,14 @@ class SharedLLC:
         n = line_addrs.shape[0]
         if n == 0:
             return out
-        # split into chunks with unique sets so state updates don't collide
-        order = np.argsort(sets, kind="stable")
         # fast path: all sets unique
         if np.unique(sets).shape[0] == n:
             out[:] = self._access_unique(line_addrs, sets, seen_before,
                                          is_write, bypass_eligible,
                                          force_bypass)
             return out
+        # split into chunks with unique sets so state updates don't collide
+        order = np.argsort(sets, kind="stable")
         sorted_sets = sets[order]
         # pass index: the k-th occurrence of a set goes into chunk k
         # (vectorized: position within the run of equal sorted sets)

@@ -152,9 +152,10 @@ class SpecDecodeWorkload:
     KV, rejected ones are discarded), so each round's draft KV is its
     own liveness epoch — the §VI-F two-epoch retirement pattern
     interleaved with a persistent reuse carrier.  ``nAcc`` of a draft
-    page is exactly ``gamma``; DBP retires the whole speculation window
-    the moment verification has consumed it, while LRU drags every
-    retired window through the LLC as dead pollution.
+    page is ``gamma + 1`` (γ autoregressive draft passes plus the one
+    verification read, matching ``spec_decode_spec``); DBP retires the
+    whole speculation window on exactly that verification read, while
+    LRU drags every retired window through the LLC as dead pollution.
     """
 
     name: str = "spec-decode"
@@ -186,6 +187,137 @@ class SpecDecodeWorkload:
     @property
     def n_draft_pages(self) -> int:
         return self.draft_len // self.page_rows
+
+    @property
+    def token_bytes(self) -> int:
+        """One decode token's activation row (Q or logit output)."""
+        return self.head_dim * self.n_kv_heads * self.dtype_bytes
+
+
+@dataclass(frozen=True)
+class SSDScanWorkload:
+    """Mamba2 SSD chunked scan (``models/ssm.py::ssd_chunked``) as a
+    cache dataflow — the dead-block insight on an attention-free
+    architecture (DESIGN.md §4).
+
+    Per chunk, the intra-chunk quadratic pass streams the chunk's
+    x/B/C inputs (bursty, bypass class), then the inter-chunk recurrence
+    reads the *previous* chunk's running state and materializes this
+    chunk's: each head's (P × N) state tile is stored once and read
+    exactly once by the next chunk's recurrence, so its ``nAcc`` ends at
+    the next chunk's materialization and the TMU retires it there.
+    Consumed states are the most-recently-read mass in the LLC — under
+    LRU they shadow the freshly materialized generation (the §VI-F
+    pollution at chunk cadence), DBP frees them on the spot.  States are
+    *dirty* reuse carriers (produced by stores), so the scenario also
+    stresses the dirty-lifetime write-back model: every state writes
+    back once it ages out, whether or not its read hit.
+    """
+
+    name: str = "ssd-scan"
+    n_seqs: int = 16
+    n_chunks: int = 6
+    n_heads: int = 6
+    d_head: int = 128                 # P
+    d_state: int = 128                # N
+    chunk_len: int = 128              # rows per chunk (x/B/C stream)
+    dtype_bytes: int = 1
+
+    def __post_init__(self) -> None:
+        if self.n_chunks < 2:
+            raise ValueError("need >= 2 chunks for a state recurrence")
+        if self.n_heads < 1 or self.n_seqs < 1:
+            raise ValueError("n_heads and n_seqs must be >= 1")
+
+    @property
+    def head_state_bytes(self) -> int:
+        """One head's (P × N) running-state tile."""
+        return self.d_head * self.d_state * self.dtype_bytes
+
+    @property
+    def state_bytes(self) -> int:
+        """One sequence's full running state (all heads) for one chunk."""
+        return self.n_heads * self.head_state_bytes
+
+    @property
+    def head_slab_bytes(self) -> int:
+        """All sequences' head-``h`` state tiles of one chunk — the unit
+        that dies in a single lockstep round (every core's recurrence
+        reads its sequence's tile in the same round), sized so it tiles
+        the TMU's ``tag``-slice dead-id regions cleanly."""
+        return self.n_seqs * self.head_state_bytes
+
+    @property
+    def chunk_in_bytes(self) -> int:
+        """x + B + C rows of one chunk (the bursty input stream)."""
+        return self.chunk_len * (self.n_heads * self.d_head
+                                 + 2 * self.d_state) * self.dtype_bytes
+
+    @property
+    def chunk_out_bytes(self) -> int:
+        """y rows of one chunk."""
+        return self.chunk_len * self.n_heads * self.d_head * self.dtype_bytes
+
+    @property
+    def intra_flops(self) -> float:
+        """Intra-chunk quadratic term per (seq, chunk), all heads."""
+        return 4.0 * self.n_heads * self.chunk_len ** 2 * self.d_head
+
+    @property
+    def inter_flops(self) -> float:
+        """State materialization + inter-chunk contribution per
+        (seq, chunk), all heads."""
+        return 4.0 * self.n_heads * self.chunk_len * self.d_head \
+            * self.d_state
+
+
+@dataclass(frozen=True)
+class PrefixShareWorkload:
+    """Prefix-cache sharing: a batch of requests whose prompts share one
+    common prefix (system prompt / few-shot header) while each request
+    appends a private suffix.
+
+    Every decode step streams the shared prefix KV on *all* cores at
+    once — a high-``sharers`` co-stream whose same-round requests merge
+    in the MSHRs while the lagging rank's reuses ride LLC storage — plus
+    each request's private suffix KV (``sharers == 1``).  The private
+    streams thrash; blind bypassing that caught them would also kill the
+    shared prefix's inter-core reuse, which is exactly the §IV-E failure
+    mode the conservative ``gqa_bypass`` variant exists to avoid — the
+    suite runs this scenario with that variant.
+    """
+
+    name: str = "prefix-share"
+    n_reqs: int = 16
+    prefix_len: int = 2048            # shared-prompt KV rows
+    suffix_len: int = 512             # private KV rows per request
+    head_dim: int = 128
+    n_kv_heads: int = 1
+    page_rows: int = 128
+    dtype_bytes: int = 1
+    n_steps: int = 4                  # decode steps simulated
+
+    def __post_init__(self) -> None:
+        if self.prefix_len % self.page_rows or \
+                self.suffix_len % self.page_rows:
+            raise ValueError("KV lengths must be page-aligned")
+        if self.n_reqs < 2:
+            raise ValueError("prefix sharing needs >= 2 requests")
+        if self.n_steps < 1:
+            raise ValueError("n_steps must be >= 1")
+
+    @property
+    def page_bytes(self) -> int:
+        return (self.page_rows * self.head_dim * self.n_kv_heads
+                * self.dtype_bytes)
+
+    @property
+    def n_prefix_pages(self) -> int:
+        return self.prefix_len // self.page_rows
+
+    @property
+    def n_suffix_pages(self) -> int:
+        return self.suffix_len // self.page_rows
 
     @property
     def token_bytes(self) -> int:

@@ -13,7 +13,8 @@ from .lower import (assign_addresses, lower_to_counts, lower_to_plan,
                     lower_to_trace, tmu_metadata)
 from .reuse import ReuseProfile, lower_to_reuse_profile
 from .scenarios import (decode_paged_spec, mlp_chain_spec, moe_ffn_spec,
-                        spec_decode_spec, transformer_layer_spec)
+                        prefix_share_spec, spec_decode_spec, ssd_scan_spec,
+                        transformer_layer_spec)
 from .suite import SUITE_POLICIES, SuiteCase, build_suite, suite_case
 
 __all__ = [
@@ -23,6 +24,7 @@ __all__ = [
     "ReuseProfile", "lower_to_reuse_profile",
     "fa2_spec", "matmul_spec",
     "decode_paged_spec", "mlp_chain_spec", "moe_ffn_spec",
-    "spec_decode_spec", "transformer_layer_spec",
+    "prefix_share_spec", "spec_decode_spec", "ssd_scan_spec",
+    "transformer_layer_spec",
     "SUITE_POLICIES", "SuiteCase", "build_suite", "suite_case",
 ]

@@ -11,7 +11,7 @@ round granularity over the burst-synchronous global interleaving
 distance fits the effective capacity — one evaluation rule for every
 replacement/bypass mechanism instead of per-policy closed forms.
 
-Three facts of the schedule that scalar working-set models collapse are
+Four facts of the schedule that scalar working-set models collapse are
 kept explicit:
 
 * **sharer-awareness** — cores are interleaved in the exact lockstep
@@ -27,7 +27,12 @@ kept explicit:
 * **priority tiers** — each entry records its tile's first line address,
   so the model can recover the hardware's ``tag[B_BITS-1:0]`` priority
   tier for any cache geometry (anti-thrashing protection and bypass
-  gears partition reuse mass by exactly these bits).
+  gears partition reuse mass by exactly these bits);
+* **dirty lifetimes** — entries carry store flags and per-tile chain
+  indices, and the tile table carries cold-store flags and tail
+  distances, so the model can propagate P(dirty) along each tile's
+  access sequence and price write-backs by when a dirtied tile actually
+  ages past capacity (the §V-B dirty-eviction traffic term).
 
 The walk is O(accesses · log accesses) at *tile* granularity (two
 Fenwick trees over the access sequence), so paper-scale suite specs
@@ -94,17 +99,39 @@ class ReuseProfile:
                       the pollution DBP removes)
     * ``e_intercore`` previous access was issued by another core
     * ``e_mshr``      same-round merge (distance 0, MSHR hit)
+    * ``e_store``     the access is a store (dirties the line —
+                      write-allocate; input to the dirty-lifetime model)
+    * ``e_tile``      index into the distinct-tile table below, so the
+                      model can chain a tile's accesses (dirty-bit
+                      propagation needs the access *sequence* per tile,
+                      not just marginal distances)
+    * ``e_prev_round`` round of the tile's previous access — the gear
+                      trajectory needs it to know whether the line's
+                      last fill was *allocated* (bypass decisions are
+                      made at fill time, so a tier bypassed now may
+                      still be resident from a lower-gear window)
 
     **Per-round traffic** that is not reuse: ``cold_round`` (first
     touches of reuse carriers), ``byp_cold_round`` / ``byp_rep_round``
     (whole-tensor-bypass Q/O traffic, first touch vs repeat),
-    ``wb_round`` (dirtied reuse-carrier lines — writeback volume if
-    evicted), ``flops_round``.
+    ``flops_round``.  (Write-back volume is not a per-round tally here:
+    the model derives it from the dirty-lifetime facts below.)
 
     **Footprint** facts for tier partitioning: the distinct tile table
     (``t_line``/``t_mass``/``t_dies``) and ``max_live_lines`` — the peak
     concurrently-live stack mass (the profile-derived active working
     set).
+
+    **Dirty-lifetime** facts (DESIGN.md §5, the write-back model): per
+    tile, whether its *first* touch was a store (``t_cold_store`` —
+    produced-then-consumed tensors allocate dirty), the round of its
+    last access (``t_last_round``), and the tile's *tail* stack distance
+    ``t_tail_dlive``/``t_tail_ddead`` — distinct live/dead mass touched
+    between the tile's final access and the end of the schedule.  A tile
+    still dirty at its last access writes back iff that forward distance
+    ages it past capacity (the same distance-vs-capacity rule hits are
+    evaluated under); distances from a store to the tile's next access
+    are already the reuse entries themselves (``e_store`` marks them).
     """
 
     name: str
@@ -119,14 +146,21 @@ class ReuseProfile:
     e_ddead: np.ndarray
     e_intercore: np.ndarray
     e_mshr: np.ndarray
+    e_store: np.ndarray
+    e_tile: np.ndarray
+    e_prev_round: np.ndarray
     cold_round: np.ndarray
     byp_cold_round: np.ndarray
     byp_rep_round: np.ndarray
-    wb_round: np.ndarray
     flops_round: np.ndarray
     t_line: np.ndarray
     t_mass: np.ndarray
     t_dies: np.ndarray                 # tile reaches n_acc (TMU-retired)
+    t_cold_store: np.ndarray           # first touch was a store (dirty fill)
+    t_cold_round: np.ndarray           # round of the tile's first touch
+    t_last_round: np.ndarray           # round of the tile's final access
+    t_tail_dlive: np.ndarray           # live mass after the final access
+    t_tail_ddead: np.ndarray           # dead mass after the final access
     max_live_lines: int
     _eval_cache: Dict[tuple, dict] = field(default_factory=dict,
                                            init=False, repr=False,
@@ -201,7 +235,6 @@ def lower_to_reuse_profile(spec: DataflowSpec) -> ReuseProfile:
     cold_round = np.zeros(n_rounds, dtype=np.int64)
     byp_cold_round = np.zeros(n_rounds, dtype=np.int64)
     byp_rep_round = np.zeros(n_rounds, dtype=np.int64)
-    wb_round = np.zeros(n_rounds, dtype=np.int64)
     flops_round = np.zeros(n_rounds, dtype=np.float64)
     byp_seen: set = set()
     tid_of = {t.name: i for i, t in enumerate(spec.tensors)}
@@ -236,9 +269,11 @@ def lower_to_reuse_profile(spec: DataflowSpec) -> ReuseProfile:
     dead = _Fenwick(P)
     # per-tile state: [position, core, round, in_dead_tree, load_count]
     state: Dict[Tuple[int, int], list] = {}
-    stored: set = set()
     tile_info: Dict[Tuple[int, int], Tuple[int, int]] = {}  # key → (line, mass)
+    tile_idx: Dict[Tuple[int, int], int] = {}               # key → table index
     tile_died: set = set()
+    cold_store: List[bool] = []        # per table index: first touch a store
+    cold_rnd: List[int] = []           # per table index: first-touch round
     live_total = 0
     max_live = 0
 
@@ -250,6 +285,9 @@ def lower_to_reuse_profile(spec: DataflowSpec) -> ReuseProfile:
     e_ddead: List[int] = []
     e_intercore: List[bool] = []
     e_mshr: List[bool] = []
+    e_store: List[bool] = []
+    e_tile: List[int] = []
+    e_prev_round: List[int] = []
 
     for i in range(P):
         r, c = seq_round[i], seq_core[i]
@@ -271,6 +309,9 @@ def lower_to_reuse_profile(spec: DataflowSpec) -> ReuseProfile:
             e_ddead.append(0)
             e_intercore.append(c != st[1])
             e_mshr.append(True)
+            e_store.append(is_store)
+            e_tile.append(tile_idx[key])
+            e_prev_round.append(st[2])
             if not is_store:
                 st[4] += 1
                 if st[4] >= n_acc[tid] and not st[3]:
@@ -281,9 +322,6 @@ def lower_to_reuse_profile(spec: DataflowSpec) -> ReuseProfile:
                     st[3] = True
                     live_total -= mass
                     tile_died.add(key)
-            if is_store and key not in stored:
-                stored.add(key)
-                wb_round[r] += mass
             continue
 
         if st is not None:
@@ -298,12 +336,18 @@ def lower_to_reuse_profile(spec: DataflowSpec) -> ReuseProfile:
             e_ddead.append(d_dead)
             e_intercore.append(c != st[1])
             e_mshr.append(False)
+            e_store.append(is_store)
+            e_tile.append(tile_idx[key])
+            e_prev_round.append(st[2])
             (dead if st[3] else live).add(p, -mass)
             if not st[3]:
                 live_total -= mass
         else:
             cold_round[r] += mass
+            tile_idx[key] = len(tile_info)
             tile_info[key] = (line, mass)
+            cold_store.append(is_store)
+            cold_rnd.append(r)
 
         cnt = (st[4] if st is not None else 0) + (0 if is_store else 1)
         dies = cnt >= n_acc[tid]
@@ -315,11 +359,20 @@ def lower_to_reuse_profile(spec: DataflowSpec) -> ReuseProfile:
             if live_total > max_live:
                 max_live = live_total
         state[key] = [i, c, r, dies, cnt]
-        if is_store and key not in stored:
-            stored.add(key)
-            wb_round[r] += mass
 
     keys = list(tile_info)
+    # tail distances: distinct live/dead mass touched after each tile's
+    # final access (its remaining window to survive to end-of-schedule —
+    # the dirty-lifetime model's eviction rule for still-dirty tiles)
+    n_t = len(keys)
+    tail_dlive = np.zeros(n_t, dtype=np.int64)
+    tail_ddead = np.zeros(n_t, dtype=np.int64)
+    last_round = np.zeros(n_t, dtype=np.int64)
+    for key, st in state.items():
+        idx = tile_idx[key]
+        tail_dlive[idx] = live.range(st[0] + 1, P - 1)
+        tail_ddead[idx] = dead.range(st[0] + 1, P - 1)
+        last_round[idx] = st[2]
     return ReuseProfile(
         name=spec.name, line_bytes=lb, n_rounds=n_rounds,
         tensor_names=[t.name for t in spec.tensors],
@@ -331,11 +384,17 @@ def lower_to_reuse_profile(spec: DataflowSpec) -> ReuseProfile:
         e_ddead=np.asarray(e_ddead, dtype=np.int64),
         e_intercore=np.asarray(e_intercore, dtype=bool),
         e_mshr=np.asarray(e_mshr, dtype=bool),
+        e_store=np.asarray(e_store, dtype=bool),
+        e_tile=np.asarray(e_tile, dtype=np.int64),
+        e_prev_round=np.asarray(e_prev_round, dtype=np.int64),
         cold_round=cold_round, byp_cold_round=byp_cold_round,
-        byp_rep_round=byp_rep_round, wb_round=wb_round,
-        flops_round=flops_round,
+        byp_rep_round=byp_rep_round, flops_round=flops_round,
         t_line=np.asarray([tile_info[k][0] for k in keys], dtype=np.int64),
         t_mass=np.asarray([tile_info[k][1] for k in keys], dtype=np.int64),
         t_dies=np.asarray([k in tile_died for k in keys], dtype=bool),
+        t_cold_store=np.asarray(cold_store, dtype=bool),
+        t_cold_round=np.asarray(cold_rnd, dtype=np.int64),
+        t_last_round=last_round,
+        t_tail_dlive=tail_dlive, t_tail_ddead=tail_ddead,
         max_live_lines=int(max_live),
     )

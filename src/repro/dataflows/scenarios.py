@@ -21,14 +21,24 @@ a capability the IR provides and a paper mechanism end to end:
   KV with a short known lifetime (its own liveness epoch, dead at
   verification) interleaved with persistent target-model KV — the
   §VI-F retirement pattern at speculation-round cadence.
+* :func:`ssd_scan_spec` — Mamba2 SSD chunked scan: per-chunk running
+  states materialized by stores and consumed exactly once by the next
+  chunk's recurrence (``nAcc`` ends at the next chunk's
+  materialization) — dead-block prediction and dirty-lifetime write-back
+  on an attention-free architecture.
+* :func:`prefix_share_spec` — prefix-cache sharing: one common prompt
+  prefix's KV co-streamed by every request (high ``sharers``; MSHR
+  merges plus a lagging rank riding LLC storage) over thrashing
+  per-request private suffixes — the gqa_bypass protection scenario.
 """
 
 from __future__ import annotations
 
-from typing import List
+from typing import List, Tuple
 
 from repro.core.workloads import (TEMPORAL, AttnWorkload, DecodeWorkload,
-                                  MoEWorkload, SpecDecodeWorkload)
+                                  MoEWorkload, PrefixShareWorkload,
+                                  SpecDecodeWorkload, SSDScanWorkload)
 
 from .fa2 import _kv_extent, emit_matmul_rounds
 from .ir import DataflowSpec, SpecBuilder
@@ -374,5 +384,145 @@ def spec_decode_spec(wl: SpecDecodeWorkload,
                 b.step(c, loads=[(dv, d_idx)], flops=half)
                 d_idx += 1
             b.step(c, stores=[(qo[s][1], r)])
+        b.pad_to_sync()
+    return b.build()
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD chunked scan: running states die at the next chunk
+# ---------------------------------------------------------------------------
+def ssd_scan_spec(wl: SSDScanWorkload, n_cores: int = 16) -> DataflowSpec:
+    """Chunked SSD scan (``models/ssm.py::ssd_chunked``) on the IR.
+
+    Per chunk ``c`` and sequence: stream the chunk's x/B/C input block
+    (bypass class), then head by head read the previous chunk's running
+    state (its single ``nAcc`` read — the TMU retires it mid-chunk) and
+    store this chunk's freshly materialized state (a *dirty* fill whose
+    lifetime runs to the next chunk's recurrence).  The final chunk's
+    state is drained once at the end, as ``ssd_chunked`` returns it.
+    Read-prev/store-next interleave at head granularity, so under LRU
+    the dead previous generation is the *most recently used* mass
+    sitting on top of the live one — the recurring §VI-F pollution
+    pattern DBP clears at chunk cadence.
+
+    All running states are declared first, **chunk-major at head-slab
+    granularity**: tensor ``S.c{c}.h{h}`` holds every sequence's head-h
+    tile of chunk c (tile index = sequence).  The TMU's dead identifier
+    is a tag-domain slice (``tag[D_MSB:D_LSB]``, §IV-B), so the unit
+    that must never straddle a dead-id region is the unit that dies
+    *atomically* — and a head slab is exactly that: every core's
+    recurrence reads its sequence's tile in the same lockstep round, so
+    the whole slab retires at that round's TLL feed and the dead-id
+    region it fills flips dead with no live residue.  (A sequence-major
+    layout interleaves generations inside one region and DBP would
+    victimize still-unread states — the layout is part of the dataflow
+    knowledge the software side owes the hardware, cf. `decode_paged_spec`.)
+    """
+    if wl.n_seqs % n_cores:
+        raise ValueError("n_seqs must be a multiple of n_cores")
+    b = SpecBuilder(wl.name, n_cores)
+
+    last = wl.n_chunks - 1
+    states: List[List[str]] = []
+    for c in range(wl.n_chunks):
+        states.append([b.tensor(
+            f"S.c{c}.h{h}", size_bytes=wl.head_slab_bytes,
+            tile_bytes=wl.head_state_bytes, n_acc=1, operand_id=2,
+            epoch=(c, min(c + 1, last)))
+            for h in range(wl.n_heads)])
+    io: List[Tuple[str, str]] = []
+    for c in range(wl.n_chunks):
+        io.append((
+            b.tensor(f"X.c{c}", size_bytes=wl.n_seqs * wl.chunk_in_bytes,
+                     tile_bytes=wl.chunk_in_bytes, n_acc=1, operand_id=0,
+                     bypass=True, epoch=(c, c)),
+            b.tensor(f"Y.c{c}", size_bytes=wl.n_seqs * wl.chunk_out_bytes,
+                     tile_bytes=wl.chunk_out_bytes, n_acc=1, operand_id=2,
+                     bypass=True, epoch=(c, c))))
+
+    intra_h = wl.intra_flops / wl.n_heads
+    inter_h = wl.inter_flops / wl.n_heads
+    for c in range(wl.n_chunks):
+        for s in range(wl.n_seqs):
+            core = s % n_cores
+            b.step(core, loads=[(io[c][0], s)])
+            for h in range(wl.n_heads):
+                if c > 0:
+                    # inter-chunk recurrence: the consuming read of the
+                    # previous chunk's state (reaches nAcc, retires)
+                    b.step(core, loads=[(states[c - 1][h], s)],
+                           flops=inter_h)
+                b.step(core, stores=[(states[c][h], s)], flops=intra_h)
+            b.step(core, stores=[(io[c][1], s)])
+        b.pad_to_sync()
+    # drain the final state (ssd_chunked returns it): its nAcc read
+    for s in range(wl.n_seqs):
+        core = s % n_cores
+        for h in range(wl.n_heads):
+            b.step(core, loads=[(states[last][h], s)])
+    b.pad_to_sync()
+    return b.build()
+
+
+# ---------------------------------------------------------------------------
+# Prefix-cache sharing: one shared prompt prefix, private suffixes
+# ---------------------------------------------------------------------------
+def prefix_share_spec(wl: PrefixShareWorkload,
+                      n_cores: int = 16) -> DataflowSpec:
+    """Decode over a shared prompt prefix plus per-request suffixes.
+
+    All ranks stream the shared prefix KV in lockstep — same-round
+    same-page requests merge in the MSHRs (distance-0 inter-core mass),
+    while the last rank lags one page so its prefix reuses ride LLC
+    *storage*, the population blind bypassing destroys (§IV-E).  The
+    per-request suffix KV is private and collectively oversubscribes the
+    LLC, supplying the contention that would make a blind controller
+    ramp its gear into the shared stream; the suite runs this case under
+    the conservative ``gqa_bypass`` variant (only the lagging non-leader
+    rank may bypass, and only under measured contention).
+    """
+    if wl.n_reqs % n_cores:
+        raise ValueError("n_reqs must be a multiple of n_cores")
+    b = SpecBuilder(wl.name, n_cores)
+
+    # one sharing group spanning all cores; the last rank is the lagging
+    # non-leader (the only rank gqa_bypass lets bypass, cf. fa2 spatial)
+    b.set_groups([0] * n_cores,
+                 [c != n_cores - 1 for c in range(n_cores)])
+
+    pre = tuple(b.tensor(
+        f"{kind}pre", size_bytes=wl.n_prefix_pages * wl.page_bytes,
+        tile_bytes=wl.page_bytes, n_acc=wl.n_reqs * wl.n_steps,
+        operand_id=1, sharers=min(wl.n_reqs, n_cores))
+        for kind in ("K", "V"))
+    suf: List[tuple] = []
+    qo: List[tuple] = []
+    for s in range(wl.n_reqs):
+        suf.append(tuple(b.tensor(
+            f"{kind}suf.s{s}", size_bytes=wl.n_suffix_pages * wl.page_bytes,
+            tile_bytes=wl.page_bytes, n_acc=wl.n_steps, operand_id=1)
+            for kind in ("K", "V")))
+        q = b.tensor(f"Q.s{s}", size_bytes=wl.n_steps * wl.token_bytes,
+                     tile_bytes=wl.token_bytes, n_acc=1, operand_id=0,
+                     bypass=True)
+        o = b.tensor(f"O.s{s}", size_bytes=wl.n_steps * wl.token_bytes,
+                     tile_bytes=wl.token_bytes, n_acc=1, operand_id=2,
+                     bypass=True)
+        qo.append((q, o))
+
+    half = 2.0 * wl.page_rows * wl.head_dim * wl.n_kv_heads
+    for t in range(wl.n_steps):
+        for s in range(wl.n_reqs):
+            c = s % n_cores
+            lag = 1 if c == n_cores - 1 else 0
+            b.step(c, loads=[(qo[s][0], t)])
+            for p in range(wl.n_prefix_pages):
+                pp = (p - lag) % wl.n_prefix_pages
+                b.step(c, loads=[(pre[0], pp)], flops=half)
+                b.step(c, loads=[(pre[1], pp)], flops=half)
+            for p in range(wl.n_suffix_pages):
+                b.step(c, loads=[(suf[s][0], p)], flops=half)
+                b.step(c, loads=[(suf[s][1], p)], flops=half)
+            b.step(c, stores=[(qo[s][1], t)])
         b.pad_to_sync()
     return b.build()

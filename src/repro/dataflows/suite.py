@@ -16,12 +16,14 @@ from typing import List, Tuple
 
 from repro.core.simulator import SimConfig
 from repro.core.workloads import (AttnWorkload, DecodeWorkload, MoEWorkload,
-                                  SpecDecodeWorkload, get_workload)
+                                  PrefixShareWorkload, SpecDecodeWorkload,
+                                  SSDScanWorkload, get_workload)
 
 from .fa2 import fa2_spec, matmul_spec
 from .ir import DataflowSpec
 from .scenarios import (decode_paged_spec, mlp_chain_spec, moe_ffn_spec,
-                        spec_decode_spec, transformer_layer_spec)
+                        prefix_share_spec, spec_decode_spec,
+                        ssd_scan_spec, transformer_layer_spec)
 
 MB = 2 ** 20
 
@@ -94,6 +96,27 @@ def build_suite(full: bool = False, n_cores: int = 16) -> List[SuiteCase]:
         "transformer-layer", transformer_layer_spec(wl_l, d_ff=1024,
                                                     n_cores=n_cores),
         SimConfig(n_cores=n_cores, llc_bytes=2 * MB)))
+
+    # one state generation is n_seqs × n_heads × P × N = 1.5 MB and
+    # head slabs retire incrementally (a read slab dies as the matching
+    # new slab is stored), so the live stack peaks at ~1 generation
+    # (12288 lines): under a 2 MB LLC the live states fit once the
+    # consumed slabs retire, while LRU drags them as MRU dead mass and
+    # thrashes — the recurring chunk-cadence DBP win
+    ssd = SSDScanWorkload(n_chunks=8 if full else 6)
+    cases.append(SuiteCase(
+        "ssd-scan", ssd_scan_spec(ssd, n_cores),
+        SimConfig(n_cores=n_cores, llc_bytes=2 * MB),
+        expect_dbp_win=True))
+
+    # shared prefix 0.5 MB + 2 MB of private suffixes over a 1 MB LLC:
+    # the private streams thrash while the co-streamed prefix is the
+    # inter-core reuse blind bypassing would destroy (gqa variant on)
+    pfx = PrefixShareWorkload(prefix_len=4096 if full else 2048)
+    cases.append(SuiteCase(
+        "prefix-share", prefix_share_spec(pfx, n_cores),
+        SimConfig(n_cores=n_cores, llc_bytes=1 * MB),
+        gqa=True))
     return cases
 
 

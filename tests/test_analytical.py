@@ -79,6 +79,52 @@ def test_metrics_perfect_and_degraded():
     assert abs(kendall_tau(np.array([1.0, 3.0, 2.0, 4.0]), x)) < 1.0
 
 
+def test_kendall_tau_tie_adjusted():
+    """τ-b: tied prediction pairs shrink the denominator instead of
+    silently counting as disagreement (the paper's §VI-G1 τ = 0.934 is
+    a τ-b figure).  One tied pair among n=4: 5 concordant pairs, none
+    discordant → τ-b = 5/sqrt(5·6), NOT the τ-a value 5/6."""
+    target = np.array([1.0, 2.0, 3.0, 4.0])
+    pred = np.array([1.0, 1.0, 2.0, 3.0])
+    assert kendall_tau(pred, target) == pytest.approx(
+        5.0 / np.sqrt(5.0 * 6.0))
+    # two independent ties, one in each input
+    assert kendall_tau(np.array([1.0, 1.0, 2.0, 3.0]),
+                       np.array([1.0, 2.0, 3.0, 3.0])) == pytest.approx(
+        4.0 / np.sqrt(5.0 * 5.0))
+    # a constant input carries no rank information; two constants agree
+    assert kendall_tau(np.ones(4), target) == 0.0
+    assert kendall_tau(np.ones(4), np.ones(4)) == 1.0
+    # monotone agreement with ties must not be biased below 1-equivalent
+    assert kendall_tau(pred, target) > (5.0 - 0.0) / 6.0
+
+
+def test_closed_pollution_single_branch():
+    """Behavior pin for the collapsed pollution condition: the two
+    former ``n_batches > 1`` branches reduce to one ``"dbp" not in
+    policy`` check — every policy either hit engine resolves must see
+    exactly the pollution the original dual-branch logic assigned
+    (including "all", whose closed §V-C treatment keeps the polluted
+    stack)."""
+    from repro.core.analytical import _KNOWN_POLICIES
+    counts = fa2_counts(WL.with_batches(2), n_cores=4)
+    assert counts.n_batches == 2 and counts.reuse_profile is None
+    hw = SimConfig(n_cores=4)
+    llc = 2 * 2**20
+    for policy in _KNOWN_POLICIES:
+        # the original two-branch logic, verbatim
+        pollution = 1.0
+        if counts.n_batches > 1 and policy == "lru":
+            pollution = 1.0 / counts.n_batches
+        if counts.n_batches > 1 and "dbp" not in policy and policy != "lru":
+            pollution = 1.0 / counts.n_batches
+        expected = kept_fraction(policy, counts.s_work_active, llc,
+                                 hw.llc_assoc, 3, "optimal", False,
+                                 pollution)
+        got = predict(counts, llc, policy, hw, model="closed")
+        assert got.kept_fraction == pytest.approx(expected), policy
+
+
 def test_model_validates_against_simulator():
     """Mini Fig-9: fit θ on a few sim points, check rank preservation."""
     hw = SimConfig(n_cores=4, llc_slices=8)

@@ -343,11 +343,16 @@ def test_suite_registry_complete_and_unique():
     assert len(set(keys)) == len(keys)
     for expected in ("fa2-temporal", "fa2-spatial", "matmul",
                      "decode-paged", "moe-ffn", "spec-decode",
-                     "mlp-chain", "transformer-layer"):
+                     "mlp-chain", "transformer-layer",
+                     "ssd-scan", "prefix-share"):
         assert expected in keys
     # the speculative-decoding case exists to demonstrate the recurring
     # two-epoch DBP win — keep it flagged for the suite_bench emit line
     assert next(c for c in cases if c.key == "spec-decode").expect_dbp_win
+    # ssd-scan exists for the chunk-state retirement win (gated in CI);
+    # prefix-share runs under the conservative gqa_bypass variant
+    assert next(c for c in cases if c.key == "ssd-scan").expect_dbp_win
+    assert next(c for c in cases if c.key == "prefix-share").gqa
     assert "lru" in SUITE_POLICIES and "at+dbp" in SUITE_POLICIES
     with pytest.raises(KeyError, match="unknown suite scenario"):
         suite_case("not-a-scenario")

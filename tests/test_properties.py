@@ -14,10 +14,12 @@ from repro.core.tmu import TMU, TMUParams, TensorMeta
 from repro.core.traces import fa2_counts
 from repro.core.workloads import (SPATIAL, TEMPORAL, AttnWorkload,
                                   DecodeWorkload, MoEWorkload,
-                                  SpecDecodeWorkload)
+                                  PrefixShareWorkload, SpecDecodeWorkload,
+                                  SSDScanWorkload)
 from repro.dataflows import (decode_paged_spec, fa2_spec, lower_to_counts,
                              lower_to_trace, matmul_spec, mlp_chain_spec,
-                             moe_ffn_spec, spec_decode_spec)
+                             moe_ffn_spec, prefix_share_spec,
+                             spec_decode_spec, ssd_scan_spec)
 from repro.launch.roofline import _shape_bytes, _wire_factor, param_count
 
 
@@ -106,7 +108,7 @@ def test_prediction_positive_and_counts_consistent(seq, kv, alloc):
 # ---------------------------------------------------------------------------
 def _random_spec(draw):
     kind = draw(st.sampled_from(["fa2", "matmul", "decode", "moe", "mlp",
-                                 "specdec"]))
+                                 "specdec", "ssd", "prefix"]))
     n_cores = draw(st.sampled_from([2, 4]))
     if kind == "fa2":
         kv = draw(st.sampled_from([1, 2, 4]))
@@ -142,6 +144,21 @@ def _random_spec(draw):
             gamma=draw(st.integers(1, 3)),
             n_verify=draw(st.integers(1, 3)))
         return spec_decode_spec(wl, n_cores)
+    if kind == "ssd":
+        wl = SSDScanWorkload(
+            n_seqs=n_cores * draw(st.sampled_from([1, 2])),
+            n_chunks=draw(st.integers(2, 4)),
+            n_heads=draw(st.sampled_from([2, 4])),
+            d_head=64, d_state=64,
+            chunk_len=draw(st.sampled_from([16, 32])))
+        return ssd_scan_spec(wl, n_cores)
+    if kind == "prefix":
+        wl = PrefixShareWorkload(
+            n_reqs=n_cores * draw(st.sampled_from([1, 2])),
+            prefix_len=draw(st.sampled_from([256, 512])),
+            suffix_len=draw(st.sampled_from([128, 256])),
+            n_steps=draw(st.integers(1, 2)))
+        return prefix_share_spec(wl, n_cores)
     dims = tuple(128 * draw(st.integers(1, 2)) for _ in range(4))
     return mlp_chain_spec(m=256, dims=dims, tile=128, n_cores=n_cores)
 
