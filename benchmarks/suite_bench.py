@@ -43,7 +43,7 @@ def _sweep_case(case, table, fit_points):
         case.cfg)
     base = results[SUITE_POLICIES.index("lru")].cycles
     for pol, res in zip(SUITE_POLICIES, results):
-        table[f"{case.key}-{pol}"] = {
+        row = {
             "scenario": case.key,
             "policy": pol,
             "cycles": res.cycles,
@@ -52,6 +52,12 @@ def _sweep_case(case, table, fit_points):
             "dead_evictions": res.dead_evictions,
             "writebacks": res.writebacks,
         }
+        if res.tenants:
+            # per-tenant attribution columns (multi-tenant mixes,
+            # DESIGN.md §8.4); conservation vs the global counters is
+            # CI-gated by scripts/suite_gate.py
+            row["tenants"] = res.tenants
+        table[f"{case.key}-{pol}"] = row
         fit_points.append((f"{case.key}-{pol}",
                            (counts, case.cfg.llc_bytes, pol, "optimal",
                             case.gqa, counts.n_rounds, res.cycles)))
@@ -74,6 +80,9 @@ def _record_errors(table, fit_points, hw, params, model, col):
             # dirty-lifetime term: predicted write-back line volume next
             # to the simulator's (closed forms carry no such term)
             row["model_writebacks"] = pred.n_wb
+            if pred.n_miss_tenant is not None:
+                row["model_tenant_misses"] = list(pred.n_miss_tenant)
+                row["model_tenant_writebacks"] = list(pred.n_wb_tenant)
         errs.setdefault(row["scenario"], []).append(
             row[f"model_rel_err_{col}"])
     return {k: float(np.mean(v)) for k, v in errs.items()}

@@ -13,7 +13,11 @@ scenario or the full suite):
   scenario cannot silently disable its gate;
 * the ``ssd-scan`` DBP win clears a regression margin
   (``SSD_SCAN_MIN_DBP``): the chunk-state retirement pattern is the
-  scenario's reason to exist.
+  scenario's reason to exist;
+* the ``mt-spec-ssd`` multi-tenant mix clears its own margin
+  (``MT_SPEC_SSD_MIN_DBP``), and every multi-tenant row's per-tenant
+  counters conserve exactly against the global ones (the attribution
+  contract of DESIGN.md §8.4).
 
 Run it immediately after each ``benchmarks.suite_bench`` invocation —
 the benchmark always writes ``reports/benchmarks/suite_bench.json``, so
@@ -26,9 +30,12 @@ import sys
 import numpy as np
 
 #: scenarios whose at+dbp-vs-lru win is part of their contract
-EXPECTED_DBP_WINS = ("decode-paged", "moe-ffn", "spec-decode", "ssd-scan")
+EXPECTED_DBP_WINS = ("decode-paged", "moe-ffn", "spec-decode", "ssd-scan",
+                     "mt-prefill-decode", "mt-spec-ssd")
 #: regression margin for the ssd-scan chunk-state win (measured 1.24x)
 SSD_SCAN_MIN_DBP = 1.10
+#: regression margin for the multi-tenant spec+ssd mix (measured 1.12x)
+MT_SPEC_SSD_MIN_DBP = 1.05
 
 path = sys.argv[1] if len(sys.argv) > 1 else \
     "reports/benchmarks/suite_bench.json"
@@ -60,6 +67,29 @@ for key in flagged:
     if key == "ssd-scan" and dbp < SSD_SCAN_MIN_DBP:
         sys.exit(f"ssd-scan: chunk-state DBP win regressed "
                  f"({dbp:.3f}x < {SSD_SCAN_MIN_DBP}x)")
+    if key == "mt-spec-ssd" and dbp < MT_SPEC_SSD_MIN_DBP:
+        sys.exit(f"mt-spec-ssd: multi-tenant DBP win regressed "
+                 f"({dbp:.3f}x < {MT_SPEC_SSD_MIN_DBP}x)")
+
+# per-tenant conservation: every multi-tenant row's tenant counters
+# must sum exactly to the global simulator counters it reports
+n_tenant_rows = 0
+for row_key, row in report["rows"].items():
+    tenants = row.get("tenants")
+    if not tenants:
+        continue
+    n_tenant_rows += 1
+    wb = sum(t["writebacks"] for t in tenants.values())
+    if wb != row["writebacks"]:
+        sys.exit(f"{row_key}: per-tenant write-backs {wb} != global "
+                 f"{row['writebacks']} (attribution broken)")
+    served = sum(t["hits"] + t["mshr_hits"] for t in tenants.values())
+    total = sum(t["hits"] + t["mshr_hits"] + t["cold_misses"]
+                + t["conflict_misses"] for t in tenants.values())
+    if total and abs(served / total - row["hit_rate"]) > 1e-9:
+        sys.exit(f"{row_key}: per-tenant hit mass does not reproduce "
+                 f"the row's hit rate")
 
 print(f"suite gate OK on {scenarios}: profile {prof:.3f} <= "
-      f"max(closed {closed:.3f}, {ABS_OK}); dbp wins {flagged}")
+      f"max(closed {closed:.3f}, {ABS_OK}); dbp wins {flagged}; "
+      f"{n_tenant_rows} multi-tenant rows conserve")

@@ -95,6 +95,14 @@ class Prediction:
     #: engine's dirty-lifetime model fills it, the closed forms carry no
     #: write-back term and leave it 0
     n_wb: float = 0.0
+    #: per-tenant breakdowns on multi-tenant composite profiles
+    #: (DESIGN.md §8.4), ordered like the profile's ``tenant_names``:
+    #: hit / miss (cold + conflict, incl. bypass traffic) / write-back
+    #: line masses.  ``None`` on single-tenant predictions and the
+    #: closed forms.
+    n_hit_tenant: Optional[Tuple[float, ...]] = None
+    n_miss_tenant: Optional[Tuple[float, ...]] = None
+    n_wb_tenant: Optional[Tuple[float, ...]] = None
 
 
 # ---------------------------------------------------------------------------
@@ -199,12 +207,15 @@ def _profile_outcome(prof, llc_bytes: int, assoc: int, at: bool, dbp: bool,
     these aggregates.
 
     ``gear`` is either a scalar (one gear everywhere — the static and
-    converged cases) or a per-round int array from the §IV-D trajectory
-    emulation.  The per-round form is *residency-aware*: bypass
-    decisions happen at fill time, so an access to a currently-bypassed
-    tier still hits if the gear **at its previous access** admitted the
-    fill — exactly the transient population a gear ramp leaves resident
-    (and the reason a converged-gear model overstates bypass losses).
+    converged cases), a per-round int array from the §IV-D trajectory
+    emulation, or an ``(n_rounds, n_tenants)`` matrix from the
+    per-tenant ("per-slice") trajectory mode — each access is then
+    evaluated under its own tenant's transient gear.  The per-round
+    forms are *residency-aware*: bypass decisions happen at fill time,
+    so an access to a currently-bypassed tier still hits if the gear
+    **at its previous access** admitted the fill — exactly the
+    transient population a gear ramp leaves resident (and the reason a
+    converged-gear model overstates bypass losses).
     """
     nr = prof.n_rounds
     if np.ndim(gear) == 0:
@@ -212,10 +223,17 @@ def _profile_outcome(prof, llc_bytes: int, assoc: int, at: bool, dbp: bool,
         key = (llc_bytes, assoc, at, dbp, int(gear), b_bits)
     else:
         g_r = np.asarray(gear, dtype=np.int64)
-        key = (llc_bytes, assoc, at, dbp, g_r.tobytes(), b_bits)
+        key = (llc_bytes, assoc, at, dbp, g_r.ndim, g_r.tobytes(), b_bits)
     out = prof._eval_cache.get(key)
     if out is not None:
         return out
+
+    e_ten = prof.e_tenant
+    t_ten = prof.t_tenant
+    n_ten = prof.n_tenants
+
+    def g_at(rounds, tenants):
+        return g_r[rounds] if g_r.ndim == 1 else g_r[rounds, tenants]
 
     cap_lines = llc_bytes // prof.line_bytes
     c_lo = cap_lines * (assoc - 1) / assoc
@@ -236,35 +254,57 @@ def _profile_outcome(prof, llc_bytes: int, assoc: int, at: bool, dbp: bool,
     stack_total = float(fp.sum())
 
     # per-gear transform tables (bypass survivors, anti-thrashing
-    # protection, distance shrink); a trajectory indexes them per access
+    # eviction-order stratification, distance shrink); a trajectory
+    # indexes them per access
     max_g = 1 << b_bits
-    prot_tab = np.zeros((max_g + 1, n_tiers), dtype=bool)
-    frac_tab = np.ones(max_g + 1)       # at: unprotected-distance scale
-    lo_tab = np.full(max_g + 1, c_lo)
-    hi_tab = np.full(max_g + 1, c_hi)
+    # at: the victim is always the lowest tier *present in the set*
+    # (§IV-A), so a tier-t line survives through two regimes and hits if
+    # either keeps it resident:
+    #
+    # * **stratified** — higher-tier lines are never victimized while a
+    #   lower tier is present, so their *standing* occupancy (their
+    #   share of the distinct mass touched so far in the run —
+    #   time-aware: early accesses see an empty cache, late ones the
+    #   accumulated high-tier residue dead tiles pin there without DBP)
+    #   shrinks the capacity left to tier t, inside which the line
+    #   competes in LRU order against its own tier's window mass.
+    #   Tiers below the gear are not refilled, but their *resident*
+    #   lines sit at the very bottom of this order: every surviving
+    #   allocation victimizes them first, so their competing mass is
+    #   the whole surviving stream under the capacity the whole
+    #   surviving standing occupancy leaves over (the ROADMAP
+    #   "resident bypassed-tier" coupling).
+    # * **churn** — alloc-on-fill keeps ~one way per set of streaming
+    #   churn even when the standing tiers saturate capacity: a
+    #   *just-used* line of any tier survives until its set's next
+    #   allocation — a recency window of one line per set
+    #   (capacity/assoc) against the allocation stream between its
+    #   accesses.
+    dscale_tab = np.zeros((max_g + 1, n_tiers))
+    above_tab = np.zeros((max_g + 1, n_tiers))   # standing mass, tiers > t
     shrink_tab = np.ones(max_g + 1)     # no-at: deleted-fraction scale
-    order = np.arange(n_tiers - 1, -1, -1)
     for g in np.unique(g_r).tolist():
         surv = np.arange(n_tiers) >= g
         fp_surv = np.where(surv, fp, 0.0)
         W = float(fp_surv.sum())
+        shrink_tab[g] = (W / stack_total) if stack_total else 1.0
         if at:
-            # protect the top tiers whose footprint fits (§IV-C)
-            cum = np.cumsum(fp_surv[order])
-            prot = np.zeros(n_tiers, dtype=bool)
-            prot[order[cum <= c_lo]] = True
-            prot &= surv
-            prot_mass = float(fp_surv[prot].sum())
-            prot_tab[g] = prot
-            frac_tab[g] = ((W - prot_mass) / stack_total) \
-                if stack_total else 0.0
-            lo_tab[g] = max(c_lo - prot_mass, 0.0)
-            hi_tab[g] = max(c_hi - prot_mass, 1.0)
-        else:
-            shrink_tab[g] = (W / stack_total) if stack_total else 1.0
+            dscale_tab[g] = np.where(
+                surv, fp_surv / stack_total if stack_total else 0.0,
+                shrink_tab[g])
+            above_tab[g] = np.where(
+                surv,
+                np.concatenate((np.cumsum(fp_surv[::-1])[::-1][1:], [0.0])),
+                W)
 
-    e_gear = g_r[prof.e_round]
-    e_prev_gear = g_r[prof.e_prev_round]
+    # fraction of the run's distinct footprint touched by each round —
+    # the ramp of the standing higher-tier occupancy above
+    if at:
+        touched = np.cumsum(prof.cold_round.astype(float))
+        touched_frac = touched / total_fp if total_fp else touched
+
+    e_gear = g_at(prof.e_round, e_ten)
+    e_prev_gear = g_at(prof.e_prev_round, e_ten)
     # residency: the line's last fill allocated iff its tier survived
     # the gear active *then* (with one gear everywhere this reduces to
     # the plain "bypassed tiers never hit" transform)
@@ -272,17 +312,37 @@ def _profile_outcome(prof, llc_bytes: int, assoc: int, at: bool, dbp: bool,
 
     # --- dbp transform: dead-epoch pollution leaves the stack ----------
     d = (prof.e_dlive if dbp else prof.e_dlive + prof.e_ddead).astype(float)
-    if at:
-        protected = prot_tab[e_gear, e_prio]
-        p_hit = np.where(protected, 1.0,
-                         _hit_prob(d * frac_tab[e_gear], lo_tab[e_gear],
-                                   hi_tab[e_gear]))
-    else:
-        p_hit = _hit_prob(d * shrink_tab[e_gear], c_lo, c_hi)
-    p_hit = np.where(not_resident, 0.0, p_hit)
-    p_hit = np.where(prof.e_mshr, 1.0, p_hit)
-
     w = prof.e_mass.astype(float)
+    alloc_now = e_prio >= e_gear          # this access's fill allocates
+    t_cold_gear = g_at(prof.t_cold_round, t_ten)
+    cold_alloc_r = np.bincount(
+        prof.t_cold_round,
+        weights=prof.t_mass * (t_prio >= t_cold_gear), minlength=nr)
+
+    def _finalize(p):
+        p = np.where(not_resident, 0.0, p)
+        return np.where(prof.e_mshr, 1.0, p)
+
+    if at:
+        occ = touched_frac[prof.e_round] * above_tab[e_gear, e_prio]
+        p_strat = _hit_prob(d * dscale_tab[e_gear, e_prio],
+                            c_lo - occ, c_hi - occ)
+        p_hit = _finalize(p_strat)
+        # churn term, as a short fixed point: the eviction threat to a
+        # just-used line is the *allocation* stream between its two
+        # accesses (hits evict nothing), which itself depends on the hit
+        # probabilities — two rounds of alternation starting from the
+        # strat-only (allocation-heaviest) estimate converge from below
+        for _ in range(2):
+            ar = (np.bincount(prof.e_round,
+                              weights=w * (1.0 - p_hit) * alloc_now,
+                              minlength=nr) + cold_alloc_r)
+            cum_a = np.concatenate(([0.0], np.cumsum(ar)))
+            a_win = cum_a[prof.e_round + 1] - cum_a[prof.e_prev_round + 1]
+            p_churn = _hit_prob(a_win, c_lo / assoc, c_hi / assoc)
+            p_hit = _finalize(np.maximum(p_strat, p_churn))
+    else:
+        p_hit = _finalize(_hit_prob(d * shrink_tab[e_gear], c_lo, c_hi))
     h_r = np.bincount(prof.e_round, weights=w * p_hit, minlength=nr)
     cf_reuse_r = np.bincount(prof.e_round, weights=w * (1.0 - p_hit),
                              minlength=nr)
@@ -297,11 +357,10 @@ def _profile_outcome(prof, llc_bytes: int, assoc: int, at: bool, dbp: bool,
     # line aged past capacity in between — if it was dirty, that
     # eviction wrote it back (and the reload is clean).  A hit leaves
     # the dirty bit in place.
-    alloc_now = e_prio >= e_gear          # this access's fill allocates
-    t_cold_gear = g_r[prof.t_cold_round]
-    t_last_gear = g_r[prof.t_last_round]
+    t_last_gear = g_at(prof.t_last_round, t_ten)
     dirty0 = prof.t_cold_store & (t_prio >= t_cold_gear)
     wb_list = [0.0] * nr
+    chain_w = [0.0] * prof.t_mass.shape[0]   # per-tile, tenant breakdown
     dl = dirty0.astype(float).tolist()
     for t, r, m, s, p, a in zip(
             prof.e_tile.tolist(), prof.e_round.tolist(),
@@ -309,7 +368,9 @@ def _profile_outcome(prof, llc_bytes: int, assoc: int, at: bool, dbp: bool,
             p_hit.tolist(), alloc_now.tolist()):
         dcur = dl[t]
         if dcur > 0.0 and p < 1.0:
-            wb_list[r] += dcur * (1.0 - p) * m
+            amt = dcur * (1.0 - p) * m
+            wb_list[r] += amt
+            chain_w[t] += amt
         # store: hit keeps residency (dirtied either way), miss
         # re-allocates dirty only if the fill is admitted
         dl[t] = (p + (1.0 - p) * a) if s else dcur * p
@@ -321,11 +382,13 @@ def _profile_outcome(prof, llc_bytes: int, assoc: int, at: bool, dbp: bool,
     d_tail_full = (prof.t_tail_dlive + prof.t_tail_ddead).astype(float)
     d_tail = prof.t_tail_dlive.astype(float) if dbp else d_tail_full
     if at:
-        prot_t = prot_tab[t_last_gear, t_prio]
-        p_surv = np.where(prot_t, 1.0,
-                          _hit_prob(d_tail * frac_tab[t_last_gear],
-                                    lo_tab[t_last_gear],
-                                    hi_tab[t_last_gear]))
+        # survival to the end of the schedule faces the *final* standing
+        # occupancy of the tiers ranked above (touched_frac = 1: by then
+        # every high-tier line that will ever stand does), against the
+        # tile's own tier's share of the remaining traffic
+        occ_t = above_tab[t_last_gear, t_prio]
+        p_surv = _hit_prob(d_tail * dscale_tab[t_last_gear, t_prio],
+                           c_lo - occ_t, c_hi - occ_t)
     else:
         p_surv = _hit_prob(d_tail * shrink_tab[t_last_gear], c_lo, c_hi)
     if dbp:
@@ -343,11 +406,10 @@ def _profile_outcome(prof, llc_bytes: int, assoc: int, at: bool, dbp: bool,
     # per-round allocations (misses beyond bypass; the trajectory
     # credits the first cap_lines fills as warm-up, which land in
     # invalid ways and evict nothing) and per-round request totals
-    alloc_r = (np.bincount(prof.e_round,
-                           weights=w * (1.0 - p_hit) * alloc_now,
-                           minlength=nr)
-               + np.bincount(prof.t_cold_round,
-                             weights=prof.t_mass * (t_prio >= t_cold_gear),
+    alloc_ew = w * (1.0 - p_hit) * alloc_now
+    cold_aw = prof.t_mass * (t_prio >= t_cold_gear)
+    alloc_r = (np.bincount(prof.e_round, weights=alloc_ew, minlength=nr)
+               + np.bincount(prof.t_cold_round, weights=cold_aw,
                              minlength=nr))
     req_r = h_r + cold_r + cf_r
 
@@ -359,6 +421,32 @@ def _profile_outcome(prof, llc_bytes: int, assoc: int, at: bool, dbp: bool,
         "kept": float((w * p_hit).sum() / total_reuse)
         if total_reuse else 1.0,
     }
+
+    if n_ten > 1:
+        # per-tenant attribution (DESIGN.md §8.4): entry masses key by
+        # the accessing tenant, tile masses (cold fills, write-backs) by
+        # the owning tenant — regions are disjoint so they coincide
+        flat_e = prof.e_round * n_ten + e_ten
+        flat_t = prof.t_cold_round * n_ten + t_ten
+        h_rt = np.bincount(flat_e, weights=w * p_hit,
+                           minlength=nr * n_ten).reshape(nr, n_ten)
+        cf_rt = (np.bincount(flat_e, weights=w * (1.0 - p_hit),
+                             minlength=nr * n_ten).reshape(nr, n_ten)
+                 + prof.byp_rep_rt)
+        cold_rt = (prof.cold_rt + prof.byp_cold_rt).astype(float)
+        alloc_rt = (np.bincount(flat_e, weights=alloc_ew,
+                                minlength=nr * n_ten).reshape(nr, n_ten)
+                    + np.bincount(flat_t, weights=cold_aw,
+                                  minlength=nr * n_ten).reshape(nr, n_ten))
+        wb_t = (np.bincount(t_ten, weights=wb_tail, minlength=n_ten)
+                + np.bincount(t_ten, weights=chain_w, minlength=n_ten))
+        out.update({
+            "alloc_rt": alloc_rt, "req_rt": h_rt + cold_rt + cf_rt,
+            "n_hit_t": h_rt.sum(axis=0),
+            "n_miss_t": (cold_rt + cf_rt).sum(axis=0),
+            "n_wb_t": wb_t,
+        })
+
     prof._eval_cache[key] = out
     return out
 
@@ -412,12 +500,18 @@ def _profile_prediction(prof, outcome: dict, hw: SimConfig,
     overhead_rounds = prof.n_rounds if n_rounds is None else n_rounds
     cycles = float((t_hit + t_cold + np.maximum(t_comp, t_cf)).sum()) \
         + params.round_overhead * overhead_rounds
+    def tup(key):
+        return tuple(float(x) for x in outcome[key]) \
+            if key in outcome else None
+
     return Prediction(
         cycles=cycles, t_hit=float(t_hit.sum()), t_cold=float(t_cold.sum()),
         t_cf=float(t_cf.sum()), t_comp=float(t_comp.sum()),
         n_hit=outcome["n_hit"], n_cold=outcome["n_cold"],
         n_cf=outcome["n_cf"], kept_fraction=outcome["kept"],
-        n_wb=outcome.get("n_wb", 0.0))
+        n_wb=outcome.get("n_wb", 0.0),
+        n_hit_tenant=tup("n_hit_t"), n_miss_tenant=tup("n_miss_t"),
+        n_wb_tenant=tup("n_wb_t"))
 
 
 def _gear_trajectory(prof, llc_bytes: int, hw: SimConfig,
@@ -442,51 +536,101 @@ def _gear_trajectory(prof, llc_bytes: int, hw: SimConfig,
     outcome mixes each round's masses from the per-gear steady-state
     outcomes along the trajectory.
     """
+    g_rt, outcome = _replay_gear_law(prof, llc_bytes, hw, params, at,
+                                     dbp, b_bits, pcfg, n_ten=1)
+    return g_rt[:, 0], outcome
+
+
+def _gear_trajectory_tenant(prof, llc_bytes: int, hw: SimConfig,
+                            params: ModelParams, at: bool, dbp: bool,
+                            b_bits: int, pcfg=None
+                            ) -> Tuple[np.ndarray, dict]:
+    """Per-slice (per-tenant) mode of the §IV-D emulation (DESIGN.md
+    §8.4): one independent feedback loop per tenant, mirroring the
+    simulator's opt-in ``per_tenant_gears`` controller.
+
+    The loops share modeled *time* (windows close on the composite
+    clock) and the one physical cache (the warm-up fill credit is one
+    shared pool, split over a chunk by each tenant's allocation share),
+    but each tenant's eviction mass moves only that tenant's gear and
+    every access is evaluated under its own tenant's transient gear —
+    the per-tenant divergence a single mean-field controller emulation
+    cannot express.  Returns ``(gear_matrix[n_rounds, n_tenants],
+    composite_outcome)``.
+    """
+    return _replay_gear_law(prof, llc_bytes, hw, params, at, dbp, b_bits,
+                            pcfg, n_ten=prof.n_tenants)
+
+
+def _replay_gear_law(prof, llc_bytes: int, hw: SimConfig,
+                     params: ModelParams, at: bool, dbp: bool,
+                     b_bits: int, pcfg, n_ten: int
+                     ) -> Tuple[np.ndarray, dict]:
+    """One implementation of the window replay for both modes — the
+    single-controller case is exactly ``n_ten=1`` (scalar gears are
+    passed through to ``_profile_outcome`` so its cache keys and the
+    composite 1-D trajectory path are unchanged)."""
     if pcfg is None:
         from .policies import PolicyConfig
         pcfg = PolicyConfig()
     nr = prof.n_rounds
     assoc = hw.llc_assoc
     max_gear = 1 << b_bits
-    outs: Dict[int, dict] = {}
-    cum_t: Dict[int, np.ndarray] = {}
-    cum_alloc_g: Dict[int, np.ndarray] = {}
-    cum_req_g: Dict[int, np.ndarray] = {}
+    outs: Dict[tuple, dict] = {}
+    cum: Dict[tuple, tuple] = {}
 
-    def outcome(g: int) -> dict:
-        o = outs.get(g)
+    def gear_arg(gt: tuple):
+        """What _profile_outcome sees for one constant gear state."""
+        if n_ten == 1:
+            return int(gt[0])
+        return np.broadcast_to(np.asarray(gt, dtype=np.int64),
+                               (nr, n_ten)).copy()
+
+    def outcome(gt: tuple) -> dict:
+        o = outs.get(gt)
         if o is None:
-            o = outs[g] = _profile_outcome(prof, llc_bytes, assoc, at, dbp,
-                                           g, b_bits)
-            th, tc, tcf, tcomp = _round_time_components(prof, o, hw, params)
-            cum_t[g] = np.cumsum(th + tc + np.maximum(tcomp, tcf)
-                                 + params.round_overhead)
-            cum_alloc_g[g] = np.cumsum(o["alloc_r"])
-            cum_req_g[g] = np.cumsum(o["req_r"])
+            o = outs[gt] = _profile_outcome(prof, llc_bytes, assoc, at,
+                                            dbp, gear_arg(gt), b_bits)
+            th, tc, tcf, tcomp = _round_time_components(prof, o, hw,
+                                                        params)
+            if n_ten == 1:
+                ca = np.cumsum(o["alloc_r"])[:, None]
+                cq = np.cumsum(o["req_r"])[:, None]
+            else:
+                ca = np.cumsum(o["alloc_rt"], axis=0)
+                cq = np.cumsum(o["req_rt"], axis=0)
+            cum[gt] = (np.cumsum(th + tc + np.maximum(tcomp, tcf)
+                                 + params.round_overhead), ca, cq)
         return o
 
-    cap = float(outcome(pcfg.b_gear)["cap_lines"])
-    gear = pcfg.b_gear
+    gears = tuple(pcfg.b_gear for _ in range(n_ten))
+    cap = float(outcome(gears)["cap_lines"])
     clock = win_start = 0.0
-    ev = acc = cum_alloc = 0.0
-    streak = 0
-    g_r = np.zeros(nr, dtype=np.int64)
+    ev = np.zeros(n_ten)
+    acc = np.zeros(n_ten)
+    cum_alloc = 0.0
+    streak = np.zeros(n_ten, dtype=np.int64)
+    g_rt = np.zeros((nr, n_ten), dtype=np.int64)
     r = 0
     while r < nr:
-        outcome(gear)
-        ct, ca, cq = cum_t[gear], cum_alloc_g[gear], cum_req_g[gear]
+        outcome(gears)
+        ct, ca, cq = cum[gears]
         base_t = ct[r - 1] if r else 0.0
         # first round whose end crosses the current window boundary
         j = int(np.searchsorted(ct, win_start + pcfg.window_cycles
                                 - clock + base_t))
         j = min(j, nr - 1)
-        g_r[r:j + 1] = gear
+        g_rt[r:j + 1] = gears
         base = r - 1
-        chunk_alloc = ca[j] - (ca[base] if r else 0.0)
+        chunk_t = ca[j] - (ca[base] if r else 0.0)       # (n_tenants,)
+        total = float(chunk_t.sum())
         # warm-up fill credit: the first cap allocations land in invalid
-        # ways and evict nothing (mirrors the simulator's cold start)
-        ev += max(cum_alloc + chunk_alloc - max(cap, cum_alloc), 0.0)
-        cum_alloc += chunk_alloc
+        # ways and evict nothing (mirrors the simulator's cold start);
+        # one shared pool, split by each tenant's share of the chunk
+        evictable = max(cum_alloc + total - max(cap, cum_alloc), 0.0)
+        if total > 0:
+            ev += chunk_t * (evictable / total)
+        cum_alloc += total
         acc += cq[j] - (cq[base] if r else 0.0)
         clock += ct[j] - base_t
         r = j + 1
@@ -496,18 +640,18 @@ def _gear_trajectory(prof, llc_bytes: int, hw: SimConfig,
             # multiples — GearController.tick is invoked once per round
             # and moves one step at most, so a round spanning several
             # windows ramps exactly one step there too
-            rate = ev / max(acc, 1.0)
-            if rate > pcfg.bypass_ub:
-                gear = min(gear + 1, max_gear)
-                streak = 0
-            elif rate < pcfg.bypass_lb:
-                streak += 1
-                if streak >= pcfg.down_streak:
-                    gear = max(gear - 1, 0)
-                    streak = 0
-            else:
-                streak = 0
-            ev = acc = 0.0
+            rate = ev / np.maximum(acc, 1.0)
+            g = np.asarray(gears, dtype=np.int64)
+            up = rate > pcfg.bypass_ub
+            low = rate < pcfg.bypass_lb
+            streak = np.where(low, streak + 1, 0)
+            down = streak >= pcfg.down_streak
+            streak[down] = 0
+            g = np.clip(g + up.astype(np.int64) - down.astype(np.int64),
+                        0, max_gear)
+            gears = tuple(int(x) for x in g)
+            ev[:] = 0.0
+            acc[:] = 0.0
             win_start += (elapsed // pcfg.window_cycles) \
                 * pcfg.window_cycles
 
@@ -515,17 +659,19 @@ def _gear_trajectory(prof, llc_bytes: int, hw: SimConfig,
     # own round, residency-aware across gear changes (an access whose
     # tier the *current* gear bypasses still hits if its last fill was
     # admitted under a lower transient gear) — cached per trajectory
-    used = np.unique(g_r)
-    if used.shape[0] == 1:
-        return g_r, outcome(int(used[0]))
-    return g_r, _profile_outcome(prof, llc_bytes, assoc, at, dbp, g_r,
-                                 b_bits)
+    segments = {tuple(row) for row in g_rt.tolist()}
+    if len(segments) == 1:
+        return g_rt, outcome(next(iter(segments)))
+    traj = g_rt[:, 0] if n_ten == 1 else g_rt
+    return g_rt, _profile_outcome(prof, llc_bytes, assoc, at, dbp, traj,
+                                  b_bits)
 
 
 def _predict_profile(counts: DataflowCounts, llc_bytes: int, policy: str,
                      hw: SimConfig, params: ModelParams,
                      bypass_variant: str, gqa: bool, b_bits: int,
-                     n_rounds: Optional[int] = None) -> Prediction:
+                     n_rounds: Optional[int] = None,
+                     per_tenant_gears: bool = False) -> Prediction:
     prof = counts.reuse_profile
     at, dbp, bypass = parse_model_policy(policy)
     if bypass and bypass_variant.startswith("fix"):
@@ -538,8 +684,10 @@ def _predict_profile(counts: DataflowCounts, llc_bytes: int, policy: str,
         # transient gears, even when the converged gear over-bypasses
         # and destroys inter-core reuse (the §IV-E failure the gqa
         # variant exists to avoid).
-        _, outcome = _gear_trajectory(prof, llc_bytes, hw, params, at, dbp,
-                                      b_bits)
+        traj = (_gear_trajectory_tenant
+                if per_tenant_gears and prof.n_tenants > 1
+                else _gear_trajectory)
+        _, outcome = traj(prof, llc_bytes, hw, params, at, dbp, b_bits)
         return _profile_prediction(prof, outcome, hw, params, n_rounds)
     gear = _static_gear(bypass, bypass_variant, gqa)
     outcome = _profile_outcome(prof, llc_bytes, hw.llc_assoc, at, dbp,
@@ -551,14 +699,21 @@ def gear_trajectory(counts: DataflowCounts, llc_bytes: int,
                     policy: str = "at+bypass",
                     hw: Optional[SimConfig] = None,
                     params: Optional[ModelParams] = None,
-                    b_bits: int = 3, policy_cfg=None) -> np.ndarray:
+                    b_bits: int = 3, policy_cfg=None,
+                    per_tenant: bool = False) -> np.ndarray:
     """Emulated per-round gear trajectory of the §IV-D feedback law.
 
     The validation-facing entry point: rounds with no requests keep the
     gear of the preceding window, matching where the simulator skips
     its controller tick.  Compare against the per-round mean gear the
     simulator records in ``SimResult.history["gear"]`` (which omits the
-    empty rounds)."""
+    empty rounds).
+
+    ``per_tenant=True`` (multi-tenant composite profiles, DESIGN.md
+    §8.4) runs one feedback loop per tenant and returns an
+    ``(n_rounds, n_tenants)`` matrix — compare column ``i`` against
+    ``SimResult.history["tenant_gear"][:, i]`` recorded under the
+    simulator's ``per_tenant_gears`` policy flag."""
     hw = hw or SimConfig()
     params = params or ModelParams()
     prof = counts.reuse_profile
@@ -568,6 +723,13 @@ def gear_trajectory(counts: DataflowCounts, llc_bytes: int,
     at, dbp, bypass = parse_model_policy(policy)
     if not bypass:
         raise ValueError(f"policy {policy!r} does not bypass")
+    if per_tenant:
+        if prof.n_tenants < 2:
+            raise ValueError("per_tenant gear trajectory needs a "
+                             "multi-tenant composite profile")
+        g_rt, _ = _gear_trajectory_tenant(prof, llc_bytes, hw, params,
+                                          at, dbp, b_bits, policy_cfg)
+        return g_rt
     g_r, _ = _gear_trajectory(prof, llc_bytes, hw, params, at, dbp,
                               b_bits, policy_cfg)
     return g_r
@@ -583,13 +745,17 @@ def predict(counts: DataflowCounts, llc_bytes: int, policy: str,
             gqa: bool = False,
             b_bits: int = 3,
             n_rounds: Optional[int] = None,
-            model: str = "profile") -> Prediction:
+            model: str = "profile",
+            per_tenant_gears: bool = False) -> Prediction:
     """Predict cycles for one (dataflow, cache size, policy) point.
 
     ``model="profile"`` (default) evaluates the reuse-distance profile
     attached to ``counts`` and falls back to the closed forms when the
     producer skipped the profile lowering; ``model="closed"`` forces the
-    original §V-C scalar step functions.
+    original §V-C scalar step functions.  ``per_tenant_gears`` mirrors
+    the simulator's opt-in policy flag on multi-tenant composites: the
+    dynamic-bypass emulation runs one feedback loop per tenant
+    (DESIGN.md §8.4) instead of the single mean-field controller.
     """
     hw = hw or SimConfig()
     params = params or ModelParams()
@@ -597,7 +763,8 @@ def predict(counts: DataflowCounts, llc_bytes: int, policy: str,
         raise KeyError(f"unknown model {model!r}")
     if model == "profile" and counts.reuse_profile is not None:
         return _predict_profile(counts, llc_bytes, policy, hw, params,
-                                bypass_variant, gqa, b_bits, n_rounds)
+                                bypass_variant, gqa, b_bits, n_rounds,
+                                per_tenant_gears)
 
     # dead data of retired batches pollutes every policy that does not
     # predict dead blocks (§VI-F); "all" names its mechanisms implicitly

@@ -106,10 +106,20 @@ class AccessPlan:
 
 
 class SharedLLC:
-    """Vectorized set-associative shared cache with DCO policies."""
+    """Vectorized set-associative shared cache with DCO policies.
+
+    ``tenant_map`` (multi-tenant composites, DESIGN.md §8.4) is the
+    sorted ``(region_start_addrs, tenant_ids)`` pair from
+    ``Trace.tenant_region_starts``: write-backs are attributed to the
+    *victim line's* tenant (``tenant_wb``), and — with the opt-in
+    ``policy.per_tenant_gears`` — the dynamic-bypass controller runs
+    one feedback loop per tenant, each access consulting and charging
+    its own tenant's gear.
+    """
 
     def __init__(self, geom: CacheGeometry, policy: PolicyConfig,
-                 tmu: Optional[TMU] = None):
+                 tmu: Optional[TMU] = None,
+                 tenant_map: Optional[Tuple[np.ndarray, np.ndarray]] = None):
         self.geom = geom
         self.policy = policy
         self.tmu = tmu
@@ -122,14 +132,47 @@ class SharedLLC:
         self.last_use = np.full((S, A), _BIG, dtype=np.int64)
         self.prio = np.full((S, A), _BIG, dtype=np.int64)
         self._clock = 0  # monotone access counter for LRU
+        # tenant attribution state: regions are huge and aligned, so the
+        # byte-address region map projects exactly onto tag space
+        # (tag = line // num_sets is monotone in the address)
+        self.n_tenants = 1
+        self._tenant_tag_starts: Optional[np.ndarray] = None
+        self._tenant_ids: Optional[np.ndarray] = None
+        self.tenant_wb: Optional[np.ndarray] = None
+        if tenant_map is not None:
+            starts, tens = tenant_map
+            tag_bytes = geom.line_bytes * geom.num_sets
+            if (starts % tag_bytes).any():
+                # a region base inside a tag region would silently
+                # misattribute every access near the boundary — the
+                # composite's region alignment must cover one tag
+                # (compose_time_sliced's REGION_ALIGN_BYTES does for
+                # every suite geometry; huge LLCs need a larger one)
+                raise ValueError(
+                    f"tenant region bases must be multiples of the tag "
+                    f"granularity num_sets*line_bytes={tag_bytes}; "
+                    f"recompose with region_align_bytes>={tag_bytes}")
+            self.n_tenants = int(tens.max()) + 1
+            self._tenant_tag_starts = starts // tag_bytes
+            self._tenant_ids = tens
+            self.tenant_wb = np.zeros(self.n_tenants, dtype=np.int64)
         self.controller: Optional[GearController] = make_controller(
-            geom.n_slices, policy)
+            geom.n_slices, policy, self.n_tenants)
+        self._per_tenant_gears = (self.controller is not None
+                                  and self.controller.n_tenants > 1)
         self.stats: Dict[str, int] = {
             "hits": 0, "cold_misses": 0, "conflict_misses": 0,
             "bypassed": 0, "evictions": 0, "dead_evictions": 0,
             "writebacks": 0,
         }
         self._prio_mask = (1 << policy.b_bits) - 1 if policy.b_bits else 0
+
+    # ------------------------------------------------------------------
+    def tenant_of_tags(self, tags: np.ndarray) -> np.ndarray:
+        """Tenant index of each cache tag (requires a tenant map)."""
+        idx = np.searchsorted(self._tenant_tag_starts, tags,
+                              side="right") - 1
+        return self._tenant_ids[np.maximum(idx, 0)]
 
     # ------------------------------------------------------------------
     def _priorities(self, tags: np.ndarray) -> np.ndarray:
@@ -140,10 +183,11 @@ class SharedLLC:
             return tags & mask
         return tags & self._prio_mask
 
-    def gear_of(self, slice_ids: np.ndarray) -> np.ndarray:
+    def gear_of(self, slice_ids: np.ndarray,
+                tenant_ids: Optional[np.ndarray] = None) -> np.ndarray:
         if self.controller is None:
             return np.zeros_like(slice_ids)
-        return self.controller.gear[slice_ids]
+        return self.controller.gears_at(slice_ids, tenant_ids)
 
     # ------------------------------------------------------------------
     def access_burst(
@@ -270,7 +314,8 @@ class SharedLLC:
             self.stats["hits"] += n_hit
             # hits feed the eviction-rate denominator of the gear feedback
             if self.controller is not None:
-                self._record_controller(hs, np.zeros(n_hit, dtype=bool))
+                self._record_controller(hs, np.zeros(n_hit, dtype=bool),
+                                        tags[hit])
             if n_hit == n:
                 return out
 
@@ -281,7 +326,9 @@ class SharedLLC:
 
         # --- bypass decision (before allocation, paper §IV-D) ----------------
         if self.policy.bypass != BYPASS_NONE:
-            gears = self.gear_of(self.geom.slice_of_set(m_sets))
+            m_tenants = (self.tenant_of_tags(m_tags)
+                         if self._per_tenant_gears else None)
+            gears = self.gear_of(self.geom.slice_of_set(m_sets), m_tenants)
             bypass = ((self._priorities(m_tags) < gears)
                       & bypass_eligible[miss]) | force_bypass[miss]
         else:
@@ -303,6 +350,12 @@ class SharedLLC:
             # writeback accounting for dirty victims
             wb = self.dirty[a_sets, way] & evicted_valid
             self.stats["writebacks"] += int(wb.sum())
+            if self.tenant_wb is not None and wb.any():
+                # charge the write-back to the *victim's* tenant region
+                victim_tenants = self.tenant_of_tags(
+                    self.tags[a_sets[wb], way[wb]])
+                self.tenant_wb += np.bincount(victim_tenants,
+                                              minlength=self.n_tenants)
             self.stats["evictions"] += int(evicted_valid.sum())
             self.stats["dead_evictions"] += int(evicted_dead.sum())
             self.tags[a_sets, way] = a_tags
@@ -316,7 +369,7 @@ class SharedLLC:
             ev_full = np.zeros(m_sets.shape[0], dtype=bool)
 
         if self.controller is not None:
-            self._record_controller(m_sets, ev_full)
+            self._record_controller(m_sets, ev_full, m_tags)
         return out
 
     # ------------------------------------------------------------------
@@ -375,9 +428,14 @@ class SharedLLC:
         return way, evicted_valid, evicted_dead
 
     # ------------------------------------------------------------------
-    def _record_controller(self, sets: np.ndarray, evicted: np.ndarray) -> None:
+    def _record_controller(self, sets: np.ndarray, evicted: np.ndarray,
+                           tags: Optional[np.ndarray] = None) -> None:
         if self.controller is not None and sets.shape[0]:
-            self.controller.record(self.geom.slice_of_set(sets), evicted)
+            tenants = (self.tenant_of_tags(tags)
+                       if self._per_tenant_gears and tags is not None
+                       else None)
+            self.controller.record(self.geom.slice_of_set(sets), evicted,
+                                   tenants)
 
     def tick(self, now_cycles: float) -> None:
         if self.controller is not None:

@@ -49,6 +49,13 @@ class PolicyConfig:
     # gqa_bypass: contention level (eviction rate) above which the slower
     # core of a sharing pair starts bypassing.
     gqa_contention_threshold: float = 0.30
+    # multi-tenant composites only (DESIGN.md §8.4): run one gear
+    # feedback loop per tenant's address region instead of one global
+    # law — each tenant's eviction rate moves only that tenant's gear,
+    # and a line's bypass decision consults its own tenant's gear.
+    # Ignored (bit-identical to the global controller) on traces that
+    # carry no tenant map.
+    per_tenant_gears: bool = False
 
     def __post_init__(self) -> None:
         if self.bypass not in (BYPASS_NONE, BYPASS_STATIC, BYPASS_DYNAMIC):
@@ -108,25 +115,53 @@ class GearController:
     cycles.  When the window closes, the eviction *rate* (evictions per
     LLC-access) is compared against ``bypass_ub`` / ``bypass_lb`` and the
     slice's gear moves one step up / down.
+
+    ``n_tenants > 1`` (the opt-in multi-tenant mode, DESIGN.md §8.4)
+    runs the identical feedback law independently per tenant: state
+    arrays grow a leading tenant axis and ``record`` attributes each
+    access to the tenant of the line that issued it, so one tenant's
+    thrashing ramps only that tenant's gear.  With one tenant every
+    array collapses to the original per-slice shape — bit-identical to
+    the single-controller behavior.
     """
 
-    def __init__(self, n_slices: int, cfg: PolicyConfig):
+    def __init__(self, n_slices: int, cfg: PolicyConfig,
+                 n_tenants: int = 1):
         self.cfg = cfg
         self.n_slices = n_slices
-        self.gear = np.full(n_slices, cfg.b_gear, dtype=np.int64)
-        self._evictions = np.zeros(n_slices, dtype=np.int64)
-        self._accesses = np.zeros(n_slices, dtype=np.int64)
-        self._low_streak = np.zeros(n_slices, dtype=np.int64)
+        self.n_tenants = n_tenants
+        shape = (n_tenants, n_slices) if n_tenants > 1 else (n_slices,)
+        self.gear = np.full(shape, cfg.b_gear, dtype=np.int64)
+        self._evictions = np.zeros(shape, dtype=np.int64)
+        self._accesses = np.zeros(shape, dtype=np.int64)
+        self._low_streak = np.zeros(shape, dtype=np.int64)
         self._window_start = 0.0
         self.max_gear = 1 << cfg.b_bits
-        # last observed eviction rate per slice (for gqa_bypass contention)
-        self.last_rate = np.zeros(n_slices, dtype=np.float64)
+        # last observed eviction rate (for gqa_bypass contention)
+        self.last_rate = np.zeros(shape, dtype=np.float64)
 
-    def record(self, slice_ids: np.ndarray, evicted: np.ndarray) -> None:
-        self._accesses += np.bincount(slice_ids, minlength=self.n_slices)
+    def _flat(self, slice_ids: np.ndarray,
+              tenant_ids: Optional[np.ndarray]) -> np.ndarray:
+        if self.n_tenants == 1:
+            return slice_ids
+        return tenant_ids * self.n_slices + slice_ids
+
+    def record(self, slice_ids: np.ndarray, evicted: np.ndarray,
+               tenant_ids: Optional[np.ndarray] = None) -> None:
+        flat = self._flat(slice_ids, tenant_ids)
+        n = self.gear.size
+        self._accesses += np.bincount(flat, minlength=n).reshape(
+            self._accesses.shape)
         if evicted.any():
-            self._evictions += np.bincount(slice_ids[evicted],
-                                           minlength=self.n_slices)
+            self._evictions += np.bincount(
+                flat[evicted], minlength=n).reshape(self._evictions.shape)
+
+    def gears_at(self, slice_ids: np.ndarray,
+                 tenant_ids: Optional[np.ndarray] = None) -> np.ndarray:
+        if self.n_tenants == 1 or tenant_ids is None:
+            gear = self.gear if self.gear.ndim == 1 else self.gear[0]
+            return gear[slice_ids]
+        return self.gear[tenant_ids, slice_ids]
 
     def tick(self, now_cycles: float) -> None:
         elapsed = now_cycles - self._window_start
@@ -157,10 +192,12 @@ class GearController:
         return self.last_rate > self.cfg.gqa_contention_threshold
 
 
-def make_controller(n_slices: int, cfg: PolicyConfig) -> Optional[GearController]:
+def make_controller(n_slices: int, cfg: PolicyConfig,
+                    n_tenants: int = 1) -> Optional[GearController]:
     if cfg.bypass == BYPASS_NONE:
         return None
-    return GearController(n_slices, cfg)
+    return GearController(
+        n_slices, cfg, n_tenants if cfg.per_tenant_gears else 1)
 
 
 def with_gear(cfg: PolicyConfig, gear: int) -> PolicyConfig:

@@ -87,6 +87,12 @@ class SimResult:
     flops: float
     freq_ghz: float = 2.0
     history: Dict[str, np.ndarray] = field(default_factory=dict)
+    #: per-tenant counter attribution on multi-tenant composite traces
+    #: (DESIGN.md §8.4): tenant name → {hits, mshr_hits, cold_misses,
+    #: conflict_misses, bypassed, writebacks}; each counter sums to the
+    #: matching global field (conservation pinned by tests).  Empty on
+    #: single-tenant traces.
+    tenants: Dict[str, Dict[str, int]] = field(default_factory=dict)
 
     @property
     def accesses(self) -> int:
@@ -110,6 +116,163 @@ class SimResult:
                 f"dram_lines={self.dram_lines}")
 
 
+class _RoundLedger:
+    """Per-round accounting shared by both engines.
+
+    One implementation of the outcome-class tallies, per-round
+    write-back delta, Eq. 1–2 wall-clock advance, history recording, and
+    per-tenant counter attribution — extracted so the compiled and step
+    engines cannot drift apart (they are pinned bit-identical, including
+    the per-tenant counters, by ``tests/test_compiled_trace.py``).
+
+    Engine contract per non-empty round: ``begin_round()`` before the
+    LLC access, then ``end_round(codes, addrs, dup_counts, flops)`` with
+    the merged per-line outcome codes, the merged line addresses, and
+    the number of MSHR-merged duplicates per line.  Empty rounds call
+    ``idle_round()``.
+    """
+
+    def __init__(self, sim: "Simulator", llc: SharedLLC, trace: Trace,
+                 record_history: bool):
+        self.cfg = sim.cfg
+        self.llc = llc
+        self.record_history = record_history
+        self.clock = 0.0
+        self.mshr_hits = 0
+        self.dram_lines = 0
+        self.flops = 0.0
+        self.hist_cycles: List[float] = []
+        self.hist_hits: List[int] = []
+        self.hist_acc: List[int] = []
+        self.hist_gear: List[float] = []
+        self.hist_tgear: List[np.ndarray] = []
+        self.tenant_names = trace.tenant_names
+        regions = trace.tenant_region_starts()
+        if regions is not None:
+            self._t_starts, self._t_ids = regions
+            n_t = trace.n_tenants
+            self.t_hits = np.zeros(n_t, dtype=np.int64)
+            self.t_mshr = np.zeros(n_t, dtype=np.int64)
+            self.t_cold = np.zeros(n_t, dtype=np.int64)
+            self.t_cf = np.zeros(n_t, dtype=np.int64)
+            self.t_byp = np.zeros(n_t, dtype=np.int64)
+        else:
+            self._t_starts = None
+        self._wb_before = 0
+
+    # -- engine hooks ---------------------------------------------------
+    def idle_round(self) -> None:
+        self.clock += self.cfg.round_overhead_cycles
+
+    def begin_round(self) -> None:
+        self._wb_before = self.llc.stats["writebacks"]
+
+    def end_round(self, codes: np.ndarray, addrs: np.ndarray,
+                  dup_counts: np.ndarray, flops_round: float) -> None:
+        n_dups = int(dup_counts.sum())
+        self.mshr_hits += n_dups
+        n_hit = int((codes == C.HIT).sum()) + n_dups
+        cold = int(((codes == C.COLD_MISS)
+                    | (codes == C.BYPASSED_COLD)).sum())
+        cf = int(((codes == C.CONFLICT_MISS)
+                  | (codes == C.BYPASSED_CONFLICT)).sum())
+        wb_round = self.llc.stats["writebacks"] - self._wb_before
+        self.dram_lines += cold + cf + wb_round
+        self.flops += flops_round
+
+        if self._t_starts is not None:
+            tens = self._t_ids[np.maximum(
+                np.searchsorted(self._t_starts, addrs, side="right") - 1,
+                0)]
+            n_t = self.t_hits.shape[0]
+            self.t_hits += np.bincount(tens[codes == C.HIT],
+                                       minlength=n_t)
+            self.t_mshr += np.bincount(tens, weights=dup_counts,
+                                       minlength=n_t).astype(np.int64)
+            self.t_cold += np.bincount(
+                tens[(codes == C.COLD_MISS)
+                     | (codes == C.BYPASSED_COLD)], minlength=n_t)
+            self.t_cf += np.bincount(
+                tens[(codes == C.CONFLICT_MISS)
+                     | (codes == C.BYPASSED_CONFLICT)], minlength=n_t)
+            self.t_byp += np.bincount(
+                tens[(codes == C.BYPASSED_COLD)
+                     | (codes == C.BYPASSED_CONFLICT)], minlength=n_t)
+
+        self.clock += self._round_time(n_hit, cold, cf, cold,
+                                       cf + wb_round, flops_round)
+        self.llc.tick(self.clock)
+
+        if self.record_history:
+            self.hist_cycles.append(self.clock)
+            self.hist_hits.append(n_hit)
+            self.hist_acc.append(n_hit + cold + cf)
+            ctl = self.llc.controller
+            if ctl is not None:
+                self.hist_gear.append(float(ctl.gear.mean()))
+                if ctl.n_tenants > 1:
+                    self.hist_tgear.append(ctl.gear.mean(axis=1))
+
+    # -- result assembly ------------------------------------------------
+    def result(self, trace: Trace, policy_name: str,
+               freq_ghz: float) -> SimResult:
+        llc = self.llc
+        history: Dict[str, np.ndarray] = {}
+        if self.record_history:
+            history = {
+                "cycles": np.asarray(self.hist_cycles),
+                "hits": np.asarray(self.hist_hits, dtype=np.int64),
+                "accesses": np.asarray(self.hist_acc, dtype=np.int64),
+            }
+            if self.hist_gear:
+                history["gear"] = np.asarray(self.hist_gear)
+            if self.hist_tgear:
+                # (rounds, tenants) mean gear per tenant's feedback loop
+                history["tenant_gear"] = np.asarray(self.hist_tgear)
+
+        tenants: Dict[str, Dict[str, int]] = {}
+        if self._t_starts is not None:
+            wb = llc.tenant_wb if llc.tenant_wb is not None else \
+                np.zeros_like(self.t_hits)
+            for i, name in enumerate(self.tenant_names):
+                tenants[name] = {
+                    "hits": int(self.t_hits[i]),
+                    "mshr_hits": int(self.t_mshr[i]),
+                    "cold_misses": int(self.t_cold[i]),
+                    "conflict_misses": int(self.t_cf[i]),
+                    "bypassed": int(self.t_byp[i]),
+                    "writebacks": int(wb[i]),
+                }
+
+        return SimResult(
+            name=trace.name, policy=policy_name, cycles=self.clock,
+            hits=llc.stats["hits"], mshr_hits=self.mshr_hits,
+            cold_misses=llc.stats["cold_misses"],
+            conflict_misses=llc.stats["conflict_misses"],
+            bypassed=llc.stats["bypassed"],
+            dram_lines=self.dram_lines,
+            writebacks=llc.stats["writebacks"],
+            dead_evictions=llc.stats["dead_evictions"],
+            flops=self.flops, freq_ghz=freq_ghz, history=history,
+            tenants=tenants,
+        )
+
+    # ------------------------------------------------------------------
+    def _round_time(self, n_hit: int, n_cold: int, n_cf: int,
+                    dram_cold: int, dram_cf: int, flops: float) -> float:
+        cfg = self.cfg
+        issue = cfg.n_cores * cfg.ipc_mem
+        bw = cfg.dram_lines_per_cycle
+        t_hit = max(n_hit / issue, n_hit / cfg.v_llc) if n_hit else 0.0
+        t_cold = max(n_cold / issue, n_cold / cfg.v_llc,
+                     dram_cold / (cfg.dram_eff_seq * bw)) if n_cold else 0.0
+        t_cf = max(n_cf / issue, n_cf / cfg.v_llc,
+                   dram_cf / (cfg.dram_eff_rand * bw)) if (n_cf or dram_cf) \
+            else 0.0
+        t_comp = flops / (cfg.n_cores * cfg.core_flops_per_cycle)
+        return t_hit + t_cold + max(t_comp, t_cf) + cfg.round_overhead_cycles
+
+
 class Simulator:
     """Run one trace under one policy."""
 
@@ -131,7 +294,8 @@ class Simulator:
                   dead_fifo_depth=cfg.dead_fifo_depth,
                   params=self.tmu_params)
         tmu.register_many(trace.tensors.values())
-        llc = SharedLLC(geom, self.policy, tmu=tmu)
+        llc = SharedLLC(geom, self.policy, tmu=tmu,
+                        tenant_map=trace.tenant_region_starts())
         return geom, tmu, llc
 
     def run(self, trace: Trace, record_history: bool = True,
@@ -167,21 +331,14 @@ class Simulator:
 
         seen = np.zeros(ct.n_seen_lines, dtype=bool)
         gqa = self.policy.gqa_variant
-        clock = 0.0
-        total_mshr_hits = 0
-        total_dram_lines = 0
-        total_flops = 0.0
-        hist_cycles: List[float] = []
-        hist_hits: List[int] = []
-        hist_acc: List[int] = []
-        hist_gear: List[float] = []
+        led = _RoundLedger(self, llc, trace, record_history)
 
         round_off = ct.round_off
         tll_off = ct.tll_off
         for r in range(ct.n_rounds):
             a0, a1 = round_off[r], round_off[r + 1]
             if a0 == a1:
-                clock += cfg.round_overhead_cycles
+                led.idle_round()
                 continue
 
             # contention only gates gqa eligibility; reading it has no
@@ -193,10 +350,8 @@ class Simulator:
             seen_b = seen[dense]           # fancy indexing → fresh copy
             seen[dense] = True
             elig = (ct.u_nonleader[sel] & contended) if gqa else True
-            n_dups = int(ct.n_acc_round[r]) - (a1 - a0)
-            total_mshr_hits += n_dups
 
-            wb_before = llc.stats["writebacks"]
+            led.begin_round()
             codes = llc.access_planned(plans[r],
                                        seen_before=seen_b,
                                        is_write=ct.u_write[sel],
@@ -206,33 +361,10 @@ class Simulator:
             if t1 > t0:
                 tmu.on_access_batch(ct.tll_tids[t0:t1], ct.tll_tiles[t0:t1],
                                     tll_tags[t0:t1], ct.tll_nacc[t0:t1])
+            led.end_round(codes, ct.u_addrs[sel], ct.u_dups[sel],
+                          float(ct.flops_round[r]))
 
-            n_hit = int((codes == C.HIT).sum()) + n_dups
-            cold = int(((codes == C.COLD_MISS)
-                        | (codes == C.BYPASSED_COLD)).sum())
-            cf = int(((codes == C.CONFLICT_MISS)
-                      | (codes == C.BYPASSED_CONFLICT)).sum())
-            wb_round = llc.stats["writebacks"] - wb_before
-            dram_cold = cold
-            dram_cf = cf + wb_round
-            total_dram_lines += dram_cold + dram_cf
-            flops_round = float(ct.flops_round[r])
-            total_flops += flops_round
-
-            clock += self._round_time(n_hit, cold, cf, dram_cold, dram_cf,
-                                      flops_round)
-            llc.tick(clock)
-
-            if record_history:
-                hist_cycles.append(clock)
-                hist_hits.append(n_hit)
-                hist_acc.append(n_hit + cold + cf)
-                if llc.controller is not None:
-                    hist_gear.append(float(llc.controller.gear.mean()))
-
-        return self._result(trace, llc, clock, total_mshr_hits,
-                            total_dram_lines, total_flops, record_history,
-                            hist_cycles, hist_hits, hist_acc, hist_gear)
+        return led.result(trace, self.policy.name, cfg.freq_ghz)
 
     # ------------------------------------------------------------------
     # step engine: reference implementation over Python Step lists
@@ -248,14 +380,7 @@ class Simulator:
         }
 
         n_rounds = trace.n_rounds
-        clock = 0.0
-        total_mshr_hits = 0
-        total_dram_lines = 0
-        total_flops = 0.0
-        hist_cycles: List[float] = []
-        hist_hits: List[int] = []
-        hist_acc: List[int] = []
-        hist_gear: List[float] = []
+        led = _RoundLedger(self, llc, trace, record_history)
 
         tensors = trace.tensors
         line_b = cfg.line_bytes
@@ -304,7 +429,7 @@ class Simulator:
                             (tll_addr, int(geom.tag_of(np.int64(tll_addr)))))
 
             if not addrs_parts:
-                clock += cfg.round_overhead_cycles
+                led.idle_round()
                 continue
 
             addrs = np.concatenate(addrs_parts)
@@ -320,14 +445,13 @@ class Simulator:
             # first occurrence touches the cache state, but write intent is
             # OR-ed over the duplicates so a load+store merge still dirties
             # the line (writeback accounting).
-            _, first_idx, inv = np.unique(addrs, return_index=True,
-                                          return_inverse=True)
-            n_dups = addrs.shape[0] - first_idx.shape[0]
-            total_mshr_hits += n_dups
+            u_addrs, first_idx, inv, counts = np.unique(
+                addrs, return_index=True, return_inverse=True,
+                return_counts=True)
             write_m = np.bincount(inv, weights=write_b,
                                   minlength=first_idx.shape[0]) > 0
 
-            wb_before = llc.stats["writebacks"]
+            led.begin_round()
             codes = llc.access_burst(addrs[first_idx],
                                      seen_before=seen_b[first_idx],
                                      is_write=write_m,
@@ -337,72 +461,9 @@ class Simulator:
             for tll_addr, tag in tll_calls:
                 tmu.on_access(tll_addr, tag)
 
-            n_hit = int((codes == C.HIT).sum()) + n_dups
-            cold = int(np.isin(codes, (C.COLD_MISS, C.BYPASSED_COLD)).sum())
-            cf = int(np.isin(codes,
-                             (C.CONFLICT_MISS, C.BYPASSED_CONFLICT)).sum())
-            wb_round = llc.stats["writebacks"] - wb_before
-            dram_cold = cold
-            dram_cf = cf + wb_round
-            total_dram_lines += dram_cold + dram_cf
-            total_flops += flops_round
+            led.end_round(codes, u_addrs, counts - 1, flops_round)
 
-            t = self._round_time(n_hit, cold, cf, dram_cold, dram_cf,
-                                 flops_round)
-            clock += t
-            llc.tick(clock)
-
-            if record_history:
-                hist_cycles.append(clock)
-                hist_hits.append(n_hit)
-                hist_acc.append(n_hit + cold + cf)
-                if llc.controller is not None:
-                    hist_gear.append(float(llc.controller.gear.mean()))
-
-        return self._result(trace, llc, clock, total_mshr_hits,
-                            total_dram_lines, total_flops, record_history,
-                            hist_cycles, hist_hits, hist_acc, hist_gear)
-
-    # ------------------------------------------------------------------
-    def _result(self, trace, llc, clock, mshr_hits, dram_lines, flops,
-                record_history, hist_cycles, hist_hits, hist_acc,
-                hist_gear) -> SimResult:
-        history = {}
-        if record_history:
-            history = {
-                "cycles": np.asarray(hist_cycles),
-                "hits": np.asarray(hist_hits, dtype=np.int64),
-                "accesses": np.asarray(hist_acc, dtype=np.int64),
-            }
-            if hist_gear:
-                history["gear"] = np.asarray(hist_gear)
-
-        return SimResult(
-            name=trace.name, policy=self.policy.name, cycles=clock,
-            hits=llc.stats["hits"], mshr_hits=mshr_hits,
-            cold_misses=llc.stats["cold_misses"],
-            conflict_misses=llc.stats["conflict_misses"],
-            bypassed=llc.stats["bypassed"],
-            dram_lines=dram_lines,
-            writebacks=llc.stats["writebacks"],
-            dead_evictions=llc.stats["dead_evictions"],
-            flops=flops, freq_ghz=self.cfg.freq_ghz, history=history,
-        )
-
-    # ------------------------------------------------------------------
-    def _round_time(self, n_hit: int, n_cold: int, n_cf: int,
-                    dram_cold: int, dram_cf: int, flops: float) -> float:
-        cfg = self.cfg
-        issue = cfg.n_cores * cfg.ipc_mem
-        bw = cfg.dram_lines_per_cycle
-        t_hit = max(n_hit / issue, n_hit / cfg.v_llc) if n_hit else 0.0
-        t_cold = max(n_cold / issue, n_cold / cfg.v_llc,
-                     dram_cold / (cfg.dram_eff_seq * bw)) if n_cold else 0.0
-        t_cf = max(n_cf / issue, n_cf / cfg.v_llc,
-                   dram_cf / (cfg.dram_eff_rand * bw)) if (n_cf or dram_cf) \
-            else 0.0
-        t_comp = flops / (cfg.n_cores * cfg.core_flops_per_cycle)
-        return t_hit + t_cold + max(t_comp, t_cf) + cfg.round_overhead_cycles
+        return led.result(trace, self.policy.name, cfg.freq_ghz)
 
 
 PolicyLike = Union[str, PolicyConfig]

@@ -62,12 +62,37 @@ class Trace:
     core_is_leader: List[bool]       # leader of its sharing group?
     line_bytes: int = LINE_BYTES
     workload: Optional[AttnWorkload] = None
+    # multi-tenant composites (DESIGN.md §8.4): tensor_id → tenant index
+    # plus tenant display names; the simulator attributes counters by
+    # the tenants' (disjoint, region-aligned) address ranges
+    tenant_of_tensor: Optional[Dict[int, int]] = None
+    tenant_names: Optional[List[str]] = None
     _compiled: Dict[int, "CompiledTrace"] = field(
         default_factory=dict, init=False, repr=False, compare=False)
 
     @property
     def n_cores(self) -> int:
         return len(self.core_steps)
+
+    @property
+    def n_tenants(self) -> int:
+        return len(self.tenant_names) if self.tenant_names else 1
+
+    def tenant_region_starts(self) -> Optional[Tuple[np.ndarray,
+                                                     np.ndarray]]:
+        """Sorted ``(region_start_addrs, tenant_ids)`` for per-tenant
+        attribution: a byte address belongs to the tenant whose region
+        start is the greatest one <= it (regions are disjoint and
+        contiguous per tenant, so the map is exact)."""
+        if self.tenant_of_tensor is None:
+            return None
+        base: Dict[int, int] = {}
+        for tid, m in self.tensors.items():
+            ten = self.tenant_of_tensor[tid]
+            base[ten] = min(base.get(ten, m.base_addr), m.base_addr)
+        tens = sorted(base, key=lambda t: base[t])
+        return (np.asarray([base[t] for t in tens], dtype=np.int64),
+                np.asarray(tens, dtype=np.int64))
 
     @property
     def n_rounds(self) -> int:
@@ -122,6 +147,8 @@ class CompiledTrace:
     * ``u_write``      OR of the write intents of all merged duplicates
     * ``u_force``      tensor-level ``bypass_all``
     * ``u_nonleader``  issuing core (first occurrence) is a gqa non-leader
+    * ``u_dups``       duplicates merged away into this line (MSHR-hit
+                       accounting, attributable per tenant)
 
     Per round: ``n_acc_round`` (pre-merge request count, for MSHR-hit
     accounting) and ``flops_round``.  The TLL feed for the TMU is a second
@@ -134,7 +161,7 @@ class CompiledTrace:
     """
 
     def __init__(self, line_bytes: int, n_rounds: int, n_seen_lines: int,
-                 u_addrs, u_dense, u_write, u_force, u_nonleader,
+                 u_addrs, u_dense, u_write, u_force, u_nonleader, u_dups,
                  round_off, n_acc_round, flops_round,
                  tll_addrs, tll_tids, tll_tiles, tll_nacc, tll_off):
         self.line_bytes = line_bytes
@@ -145,6 +172,7 @@ class CompiledTrace:
         self.u_write = u_write
         self.u_force = u_force
         self.u_nonleader = u_nonleader
+        self.u_dups = u_dups          # merged-away duplicates per line
         self.round_off = round_off
         self.n_acc_round = n_acc_round
         self.flops_round = flops_round
@@ -245,12 +273,14 @@ class CompiledTrace:
             u_nonleader = a_nonlead[order][start_idx]
             u_write = np.maximum.reduceat(
                 a_write[order].astype(np.int8), start_idx).astype(bool)
+            u_dups = np.diff(np.append(start_idx, n_acc_total)) - 1
             round_off = np.searchsorted(u_round,
                                         np.arange(n_rounds + 1))
             n_acc_round = np.bincount(a_round, minlength=n_rounds)
         else:
             u_addrs = u_dense = np.empty(0, dtype=np.int64)
             u_write = u_force = u_nonleader = np.empty(0, dtype=bool)
+            u_dups = np.empty(0, dtype=np.int64)
             round_off = np.zeros(n_rounds + 1, dtype=np.int64)
             n_acc_round = np.zeros(n_rounds, dtype=np.int64)
 
@@ -260,7 +290,7 @@ class CompiledTrace:
         )).astype(np.int64)
         return cls(
             line_bytes, n_rounds, n_seen,
-            u_addrs, u_dense, u_write, u_force, u_nonleader,
+            u_addrs, u_dense, u_write, u_force, u_nonleader, u_dups,
             round_off.astype(np.int64), n_acc_round.astype(np.int64),
             flops_round,
             np.asarray(t_addr, dtype=np.int64),

@@ -7,6 +7,7 @@ description.  The scenario registry (``build_suite``) is the canonical
 entry point for sweeping every expressible dataflow.
 """
 
+from .compose import compose_time_sliced, tenant_regions
 from .fa2 import fa2_spec, matmul_spec
 from .ir import DataflowSpec, SpecBuilder, StepSpec, TensorSpec
 from .lower import (assign_addresses, lower_to_counts, lower_to_plan,
@@ -19,6 +20,7 @@ from .suite import SUITE_POLICIES, SuiteCase, build_suite, suite_case
 
 __all__ = [
     "DataflowSpec", "SpecBuilder", "StepSpec", "TensorSpec",
+    "compose_time_sliced", "tenant_regions",
     "assign_addresses", "lower_to_counts", "lower_to_plan",
     "lower_to_trace", "tmu_metadata",
     "ReuseProfile", "lower_to_reuse_profile",

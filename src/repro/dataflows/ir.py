@@ -97,7 +97,18 @@ class StepSpec:
 
 @dataclass
 class DataflowSpec:
-    """A complete dataflow: tensor layer + per-core round schedule."""
+    """A complete dataflow: tensor layer + per-core round schedule.
+
+    ``tenant_of_tensor`` / ``tenant_names`` / ``tenant_region_align`` are
+    set by :func:`~repro.dataflows.compose.compose_time_sliced` on
+    multi-tenant composites: every tensor belongs to exactly one tenant,
+    tenants occupy disjoint address regions (the shared allocator aligns
+    each tenant's first tensor to ``tenant_region_align`` so no TMU
+    dead-id tag region straddles two tenants), and all lowerings carry
+    the mapping through so simulator counters, profile masses, and plans
+    can be attributed per tenant.  ``None`` on ordinary single-tenant
+    specs.
+    """
 
     name: str
     tensors: List[TensorSpec]                 # declaration order = layout order
@@ -106,10 +117,17 @@ class DataflowSpec:
     core_is_leader: List[bool]
     line_bytes: int = LINE_BYTES
     workload: Optional[AttnWorkload] = None
+    tenant_of_tensor: Optional[Dict[str, int]] = None
+    tenant_names: Optional[List[str]] = None
+    tenant_region_align: int = 0
 
     @property
     def n_cores(self) -> int:
         return len(self.core_programs)
+
+    @property
+    def n_tenants(self) -> int:
+        return len(self.tenant_names) if self.tenant_names else 1
 
     @property
     def n_rounds(self) -> int:
@@ -150,6 +168,28 @@ class DataflowSpec:
                             f"{self.name}: core {c} round {r}: tile {tile} "
                             f"out of range for {tname!r} "
                             f"({t.num_tiles} tiles)")
+        if self.tenant_of_tensor is not None:
+            if self.tenant_names is None:
+                raise ValueError(f"{self.name}: tenant map without names")
+            n_t = len(self.tenant_names)
+            seen_tenants: List[int] = []
+            for t in self.tensors:
+                tid = self.tenant_of_tensor.get(t.name)
+                if tid is None or not (0 <= tid < n_t):
+                    raise ValueError(
+                        f"{self.name}: tensor {t.name!r} has no valid "
+                        f"tenant assignment")
+                if not seen_tenants or seen_tenants[-1] != tid:
+                    seen_tenants.append(tid)
+            if len(seen_tenants) != len(set(seen_tenants)):
+                # the shared allocator and the simulator's region map
+                # both model each tenant as ONE contiguous run of the
+                # declaration order; interleaved declarations would
+                # silently land tensors inside another tenant's region
+                raise ValueError(
+                    f"{self.name}: tenant declarations must be "
+                    f"contiguous (tenant-major tensor order), got run "
+                    f"sequence {seen_tenants}")
 
     # ------------------------------------------------------------------
     def per_tensor_line_accesses(self) -> Dict[str, Tuple[int, int]]:

@@ -38,12 +38,25 @@ def assign_addresses(spec: DataflowSpec) -> Dict[int, TensorMeta]:
 
     Declaration order is allocation order and the tensor id is the
     declaration index — the single source of truth for the layout every
-    lowering (and the TMU) observes.
+    lowering (and the TMU) observes.  On a multi-tenant composite
+    (``spec.tenant_of_tensor``) each tenant's first tensor is aligned to
+    ``spec.tenant_region_align``, so tenants occupy disjoint address
+    regions and no TMU dead-id tag region straddles two tenants
+    (DESIGN.md §8.4).
     """
     alloc = _Allocator()
     metas: Dict[int, TensorMeta] = {}
+    tenant_of = spec.tenant_of_tensor
+    region_align = spec.tenant_region_align
+    prev_tenant = None
     for tid, t in enumerate(spec.tensors):
-        base = alloc.alloc(t.size_bytes, t.tile_bytes)
+        align = t.tile_bytes
+        if tenant_of is not None and region_align:
+            tenant = tenant_of[t.name]
+            if tenant != prev_tenant:
+                align = max(align, region_align)
+            prev_tenant = tenant
+        base = alloc.alloc(t.size_bytes, align)
         metas[tid] = TensorMeta(
             tensor_id=tid, base_addr=base, size_bytes=t.size_bytes,
             tile_bytes=t.tile_bytes, n_acc=t.n_acc,
@@ -70,10 +83,17 @@ def lower_to_trace(spec: DataflowSpec) -> Trace:
                 stores=[(tid_of[n], tile) for n, tile in s.stores],
                 flops=s.flops))
         core_steps.append(steps)
+    tenant_of = None
+    if spec.tenant_of_tensor is not None:
+        tenant_of = {tid_of[n]: ten
+                     for n, ten in spec.tenant_of_tensor.items()}
     return Trace(name=spec.name, tensors=metas, core_steps=core_steps,
                  core_group=list(spec.core_group),
                  core_is_leader=list(spec.core_is_leader),
-                 line_bytes=spec.line_bytes, workload=spec.workload)
+                 line_bytes=spec.line_bytes, workload=spec.workload,
+                 tenant_of_tensor=tenant_of,
+                 tenant_names=(list(spec.tenant_names)
+                               if spec.tenant_names else None))
 
 
 # ---------------------------------------------------------------------------

@@ -111,11 +111,21 @@ class ReuseProfile:
                       made at fill time, so a tier bypassed now may
                       still be resident from a lower-gear window)
 
-    **Per-round traffic** that is not reuse: ``cold_round`` (first
-    touches of reuse carriers), ``byp_cold_round`` / ``byp_rep_round``
-    (whole-tensor-bypass Q/O traffic, first touch vs repeat),
-    ``flops_round``.  (Write-back volume is not a per-round tally here:
-    the model derives it from the dirty-lifetime facts below.)
+    **Per-round traffic** that is not reuse, kept per tenant (second
+    axis; single-tenant specs have one column): ``cold_rt`` (first
+    touches of reuse carriers), ``byp_cold_rt`` / ``byp_rep_rt``
+    (whole-tensor-bypass Q/O traffic, first touch vs repeat).  The
+    tenant-summed views remain available as ``cold_round`` /
+    ``byp_cold_round`` / ``byp_rep_round``; ``flops_round`` stays
+    global.  (Write-back volume is not a per-round tally here: the
+    model derives it from the dirty-lifetime facts below.)
+
+    **Tenant attribution** (multi-tenant composites, DESIGN.md §8.4):
+    ``tenant_names`` and ``tenant_of_tensor`` (tensor index → tenant)
+    plus ``t_tensor`` (tile → tensor index) let every mass above be
+    keyed by tenant — ``e_tenant`` / ``t_tenant`` are the derived
+    per-entry / per-tile tenant indices the model's per-slice gear mode
+    evaluates against.
 
     **Footprint** facts for tier partitioning: the distinct tile table
     (``t_line``/``t_mass``/``t_dies``) and ``max_live_lines`` — the peak
@@ -149,12 +159,13 @@ class ReuseProfile:
     e_store: np.ndarray
     e_tile: np.ndarray
     e_prev_round: np.ndarray
-    cold_round: np.ndarray
-    byp_cold_round: np.ndarray
-    byp_rep_round: np.ndarray
+    cold_rt: np.ndarray                # (n_rounds, n_tenants)
+    byp_cold_rt: np.ndarray            # (n_rounds, n_tenants)
+    byp_rep_rt: np.ndarray             # (n_rounds, n_tenants)
     flops_round: np.ndarray
     t_line: np.ndarray
     t_mass: np.ndarray
+    t_tensor: np.ndarray               # tile → tensor index
     t_dies: np.ndarray                 # tile reaches n_acc (TMU-retired)
     t_cold_store: np.ndarray           # first touch was a store (dirty fill)
     t_cold_round: np.ndarray           # round of the tile's first touch
@@ -162,6 +173,9 @@ class ReuseProfile:
     t_tail_dlive: np.ndarray           # live mass after the final access
     t_tail_ddead: np.ndarray           # dead mass after the final access
     max_live_lines: int
+    tenant_names: List[str] = field(default_factory=lambda: ["t0"])
+    tenant_of_tensor: np.ndarray = field(
+        default_factory=lambda: np.zeros(0, dtype=np.int64))
     _eval_cache: Dict[tuple, dict] = field(default_factory=dict,
                                            init=False, repr=False,
                                            compare=False)
@@ -170,6 +184,30 @@ class ReuseProfile:
     @property
     def n_entries(self) -> int:
         return int(self.e_mass.shape[0])
+
+    @property
+    def n_tenants(self) -> int:
+        return len(self.tenant_names)
+
+    @property
+    def cold_round(self) -> np.ndarray:
+        return self.cold_rt.sum(axis=1)
+
+    @property
+    def byp_cold_round(self) -> np.ndarray:
+        return self.byp_cold_rt.sum(axis=1)
+
+    @property
+    def byp_rep_round(self) -> np.ndarray:
+        return self.byp_rep_rt.sum(axis=1)
+
+    @property
+    def e_tenant(self) -> np.ndarray:
+        return self.tenant_of_tensor[self.e_tensor]
+
+    @property
+    def t_tenant(self) -> np.ndarray:
+        return self.tenant_of_tensor[self.t_tensor]
 
     def total_reuse_mass(self) -> int:
         """Total repeat-access mass in lines — pinned equal to
@@ -224,6 +262,13 @@ def lower_to_reuse_profile(spec: DataflowSpec) -> ReuseProfile:
     start_line = [metas[i].base_addr // lb for i in range(len(spec.tensors))]
     n_acc = [t.n_acc for t in spec.tensors]
     is_bypass = [t.bypass for t in spec.tensors]
+    if spec.tenant_of_tensor is not None and spec.tenant_names:
+        tenant_names = list(spec.tenant_names)
+        tn_of = [spec.tenant_of_tensor[t.name] for t in spec.tensors]
+    else:
+        tenant_names = [spec.name]
+        tn_of = [0] * len(spec.tensors)
+    n_ten = len(tenant_names)
 
     # ---- pass 1: flatten the schedule into the global access sequence
     # (reuse carriers only; bypass traffic is tallied per round directly)
@@ -232,9 +277,9 @@ def lower_to_reuse_profile(spec: DataflowSpec) -> ReuseProfile:
     seq_tid: List[int] = []
     seq_tile: List[int] = []
     seq_store: List[bool] = []
-    cold_round = np.zeros(n_rounds, dtype=np.int64)
-    byp_cold_round = np.zeros(n_rounds, dtype=np.int64)
-    byp_rep_round = np.zeros(n_rounds, dtype=np.int64)
+    cold_rt = np.zeros((n_rounds, n_ten), dtype=np.int64)
+    byp_cold_rt = np.zeros((n_rounds, n_ten), dtype=np.int64)
+    byp_rep_rt = np.zeros((n_rounds, n_ten), dtype=np.int64)
     flops_round = np.zeros(n_rounds, dtype=np.float64)
     byp_seen: set = set()
     tid_of = {t.name: i for i, t in enumerate(spec.tensors)}
@@ -252,10 +297,10 @@ def lower_to_reuse_profile(spec: DataflowSpec) -> ReuseProfile:
                 if is_bypass[tid]:
                     key = (tid, tile)
                     if key in byp_seen:
-                        byp_rep_round[r] += lines_per_tile[tid]
+                        byp_rep_rt[r, tn_of[tid]] += lines_per_tile[tid]
                     else:
                         byp_seen.add(key)
-                        byp_cold_round[r] += lines_per_tile[tid]
+                        byp_cold_rt[r, tn_of[tid]] += lines_per_tile[tid]
                     continue
                 seq_round.append(r)
                 seq_core.append(c)
@@ -343,7 +388,7 @@ def lower_to_reuse_profile(spec: DataflowSpec) -> ReuseProfile:
             if not st[3]:
                 live_total -= mass
         else:
-            cold_round[r] += mass
+            cold_rt[r, tn_of[tid]] += mass
             tile_idx[key] = len(tile_info)
             tile_info[key] = (line, mass)
             cold_store.append(is_store)
@@ -387,14 +432,17 @@ def lower_to_reuse_profile(spec: DataflowSpec) -> ReuseProfile:
         e_store=np.asarray(e_store, dtype=bool),
         e_tile=np.asarray(e_tile, dtype=np.int64),
         e_prev_round=np.asarray(e_prev_round, dtype=np.int64),
-        cold_round=cold_round, byp_cold_round=byp_cold_round,
-        byp_rep_round=byp_rep_round, flops_round=flops_round,
+        cold_rt=cold_rt, byp_cold_rt=byp_cold_rt,
+        byp_rep_rt=byp_rep_rt, flops_round=flops_round,
         t_line=np.asarray([tile_info[k][0] for k in keys], dtype=np.int64),
         t_mass=np.asarray([tile_info[k][1] for k in keys], dtype=np.int64),
+        t_tensor=np.asarray([k[0] for k in keys], dtype=np.int64),
         t_dies=np.asarray([k in tile_died for k in keys], dtype=bool),
         t_cold_store=np.asarray(cold_store, dtype=bool),
         t_cold_round=np.asarray(cold_rnd, dtype=np.int64),
         t_last_round=last_round,
         t_tail_dlive=tail_dlive, t_tail_ddead=tail_ddead,
         max_live_lines=int(max_live),
+        tenant_names=tenant_names,
+        tenant_of_tensor=np.asarray(tn_of, dtype=np.int64),
     )

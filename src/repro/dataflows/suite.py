@@ -7,18 +7,26 @@ shared dataflows, §IV-E).  ``benchmarks/suite_bench.py`` sweeps the fig-4
 policy set across this registry and cross-validates the simulator against
 the analytical model; tests and future scenario PRs extend the registry
 rather than writing new one-off builders.
+
+The registry is **lazy**: ``_REGISTRY`` maps each key to a builder thunk
+and specs are only constructed when a case is actually requested —
+``suite_case(key)`` builds exactly one case (CI smoke used to pay the
+full ~10× suite build cost per single-scenario invocation), while
+``build_suite()`` materializes all of them in registration order exactly
+as before.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Tuple
+from typing import Callable, Dict, List, Tuple
 
 from repro.core.simulator import SimConfig
 from repro.core.workloads import (AttnWorkload, DecodeWorkload, MoEWorkload,
                                   PrefixShareWorkload, SpecDecodeWorkload,
                                   SSDScanWorkload, get_workload)
 
+from .compose import compose_time_sliced
 from .fa2 import fa2_spec, matmul_spec
 from .ir import DataflowSpec
 from .scenarios import (decode_paged_spec, mlp_chain_spec, moe_ffn_spec,
@@ -43,60 +51,75 @@ class SuiteCase:
     expect_dbp_win: bool = False
 
 
-def build_suite(full: bool = False, n_cores: int = 16) -> List[SuiteCase]:
-    """Instantiate the whole suite (reduced grid by default, paper-scale
-    shapes with ``full=True``)."""
+# ---------------------------------------------------------------------------
+# Case builders (lazy: invoked per requested case, not at import / lookup)
+# ---------------------------------------------------------------------------
+def _fa2_temporal(full: bool, n_cores: int) -> SuiteCase:
     seq = 2048 if full else 1024
-    cases: List[SuiteCase] = []
+    wl = get_workload("gemma3-27b", seq_len=seq)
+    return SuiteCase(
+        "fa2-temporal", fa2_spec(wl, n_cores),
+        SimConfig(n_cores=n_cores, llc_bytes=(4 if full else 2) * MB))
 
-    # LLC sizes put each case in the paper's contended regime (working
-    # set a small multiple of capacity) at the default reduced shapes
-    wl_t = get_workload("gemma3-27b", seq_len=seq)
-    cases.append(SuiteCase(
-        "fa2-temporal", fa2_spec(wl_t, n_cores),
-        SimConfig(n_cores=n_cores, llc_bytes=(4 if full else 2) * MB)))
 
-    wl_s = get_workload("qwen3-8b", seq_len=seq)
-    cases.append(SuiteCase(
-        "fa2-spatial", fa2_spec(wl_s, n_cores),
+def _fa2_spatial(full: bool, n_cores: int) -> SuiteCase:
+    seq = 2048 if full else 1024
+    wl = get_workload("qwen3-8b", seq_len=seq)
+    return SuiteCase(
+        "fa2-spatial", fa2_spec(wl, n_cores),
         SimConfig(n_cores=n_cores, llc_bytes=(2 if full else 1) * MB),
-        gqa=True))
+        gqa=True)
 
+
+def _matmul(full: bool, n_cores: int) -> SuiteCase:
     dim = 2048 if full else 1024
-    cases.append(SuiteCase(
+    return SuiteCase(
         "matmul", matmul_spec(dim, dim, dim, tile=128, n_cores=n_cores),
-        SimConfig(n_cores=n_cores, llc_bytes=1 * MB)))
+        SimConfig(n_cores=n_cores, llc_bytes=1 * MB))
 
+
+def _decode_paged(full: bool, n_cores: int) -> SuiteCase:
     dec = DecodeWorkload(seq_len=4096 if full else 2048)
-    cases.append(SuiteCase(
+    return SuiteCase(
         "decode-paged", decode_paged_spec(dec, n_cores),
         SimConfig(n_cores=n_cores, llc_bytes=4 * MB),
-        expect_dbp_win=True))
+        expect_dbp_win=True)
 
+
+def _moe_ffn(full: bool, n_cores: int) -> SuiteCase:
     moe = MoEWorkload(n_steps=12 if full else 8)
-    cases.append(SuiteCase(
+    return SuiteCase(
         "moe-ffn", moe_ffn_spec(moe, n_cores),
         SimConfig(n_cores=n_cores, llc_bytes=2 * MB),
-        expect_dbp_win=True))
+        expect_dbp_win=True)
 
+
+def _spec_decode(full: bool, n_cores: int) -> SuiteCase:
     spd = SpecDecodeWorkload(target_len=1024 if full else 512)
-    cases.append(SuiteCase(
+    return SuiteCase(
         "spec-decode", spec_decode_spec(spd, n_cores),
         SimConfig(n_cores=n_cores, llc_bytes=(8 if full else 4) * MB),
-        expect_dbp_win=True))
+        expect_dbp_win=True)
 
-    cases.append(SuiteCase(
+
+def _mlp_chain(full: bool, n_cores: int) -> SuiteCase:
+    return SuiteCase(
         "mlp-chain",
         mlp_chain_spec(m=2048 if full else 1024, n_cores=n_cores),
-        SimConfig(n_cores=n_cores, llc_bytes=1 * MB)))
+        SimConfig(n_cores=n_cores, llc_bytes=1 * MB))
 
-    wl_l = AttnWorkload("tl-8h", n_q_heads=8, n_kv_heads=4, head_dim=128,
-                        seq_len=seq, group_alloc="temporal")
-    cases.append(SuiteCase(
-        "transformer-layer", transformer_layer_spec(wl_l, d_ff=1024,
+
+def _transformer_layer(full: bool, n_cores: int) -> SuiteCase:
+    seq = 2048 if full else 1024
+    wl = AttnWorkload("tl-8h", n_q_heads=8, n_kv_heads=4, head_dim=128,
+                      seq_len=seq, group_alloc="temporal")
+    return SuiteCase(
+        "transformer-layer", transformer_layer_spec(wl, d_ff=1024,
                                                     n_cores=n_cores),
-        SimConfig(n_cores=n_cores, llc_bytes=2 * MB)))
+        SimConfig(n_cores=n_cores, llc_bytes=2 * MB))
 
+
+def _ssd_scan(full: bool, n_cores: int) -> SuiteCase:
     # one state generation is n_seqs × n_heads × P × N = 1.5 MB and
     # head slabs retire incrementally (a read slab dies as the matching
     # new slab is stored), so the live stack peaks at ~1 generation
@@ -104,27 +127,92 @@ def build_suite(full: bool = False, n_cores: int = 16) -> List[SuiteCase]:
     # consumed slabs retire, while LRU drags them as MRU dead mass and
     # thrashes — the recurring chunk-cadence DBP win
     ssd = SSDScanWorkload(n_chunks=8 if full else 6)
-    cases.append(SuiteCase(
+    return SuiteCase(
         "ssd-scan", ssd_scan_spec(ssd, n_cores),
         SimConfig(n_cores=n_cores, llc_bytes=2 * MB),
-        expect_dbp_win=True))
+        expect_dbp_win=True)
 
+
+def _prefix_share(full: bool, n_cores: int) -> SuiteCase:
     # shared prefix 0.5 MB + 2 MB of private suffixes over a 1 MB LLC:
     # the private streams thrash while the co-streamed prefix is the
     # inter-core reuse blind bypassing would destroy (gqa variant on)
     pfx = PrefixShareWorkload(prefix_len=4096 if full else 2048)
-    cases.append(SuiteCase(
+    return SuiteCase(
         "prefix-share", prefix_share_spec(pfx, n_cores),
         SimConfig(n_cores=n_cores, llc_bytes=1 * MB),
-        gqa=True))
-    return cases
+        gqa=True)
+
+
+# --- multi-tenant mixes (DESIGN.md §8.4) -----------------------------------
+def _mt_prefill_decode(full: bool, n_cores: int) -> SuiteCase:
+    # the classic serving mix: a compute-heavy prefill tenant (FA2 over
+    # one attention unit) time-sliced against a decode tenant whose
+    # paged KV pollutes the shared LLC as sequences finish — DBP retires
+    # the dead pages of *both* tenants' regions, and the prefill
+    # tenant's KV reuse must survive the decode tenant's thrash
+    seq = 1024 if full else 512
+    wl = AttnWorkload("prefill", n_q_heads=16, n_kv_heads=8, head_dim=128,
+                      seq_len=seq, group_alloc="temporal")
+    dec = DecodeWorkload(seq_len=2048 if full else 1024,
+                         n_steps=6, retire_step=3)
+    spec = compose_time_sliced(
+        [fa2_spec(wl, n_cores), decode_paged_spec(dec, n_cores)],
+        quantum_rounds=16, name="mt-prefill-decode")
+    return SuiteCase(
+        "mt-prefill-decode", spec,
+        SimConfig(n_cores=n_cores, llc_bytes=(4 if full else 2) * MB),
+        expect_dbp_win=True)
+
+
+def _mt_spec_ssd(full: bool, n_cores: int) -> SuiteCase:
+    # two DBP-heavy epoch structures colliding on one LLC: speculative
+    # decoding's per-cycle draft windows and the SSD scan's chunk-state
+    # generations retire at *different* cadences, so the dead-mass mix
+    # the shared cache carries is never aligned with either tenant's
+    # epoch boundary — the recurring pollution pattern per tenant
+    spd = SpecDecodeWorkload(target_len=512 if full else 256,
+                             draft_len=128, n_verify=3)
+    ssd = SSDScanWorkload(n_chunks=6 if full else 5, n_heads=4)
+    spec = compose_time_sliced(
+        [spec_decode_spec(spd, n_cores), ssd_scan_spec(ssd, n_cores)],
+        quantum_rounds=16, name="mt-spec-ssd")
+    return SuiteCase(
+        "mt-spec-ssd", spec,
+        SimConfig(n_cores=n_cores, llc_bytes=2 * MB),
+        expect_dbp_win=True)
+
+
+#: key → builder thunk, in suite order; ``build_suite`` materializes all
+#: of them, ``suite_case`` exactly one
+_REGISTRY: Dict[str, Callable[[bool, int], SuiteCase]] = {
+    "fa2-temporal": _fa2_temporal,
+    "fa2-spatial": _fa2_spatial,
+    "matmul": _matmul,
+    "decode-paged": _decode_paged,
+    "moe-ffn": _moe_ffn,
+    "spec-decode": _spec_decode,
+    "mlp-chain": _mlp_chain,
+    "transformer-layer": _transformer_layer,
+    "ssd-scan": _ssd_scan,
+    "prefix-share": _prefix_share,
+    "mt-prefill-decode": _mt_prefill_decode,
+    "mt-spec-ssd": _mt_spec_ssd,
+}
+
+
+def build_suite(full: bool = False, n_cores: int = 16) -> List[SuiteCase]:
+    """Instantiate the whole suite (reduced grid by default, paper-scale
+    shapes with ``full=True``)."""
+    return [build(full, n_cores) for build in _REGISTRY.values()]
 
 
 def suite_case(key: str, full: bool = False,
                n_cores: int = 16) -> SuiteCase:
-    cases = build_suite(full=full, n_cores=n_cores)
-    for case in cases:
-        if case.key == key:
-            return case
-    raise KeyError(f"unknown suite scenario {key!r}; have "
-                   f"{[c.key for c in cases]}")
+    """Build exactly one registered case (lazy: no other spec is
+    constructed — the CI smoke path)."""
+    build = _REGISTRY.get(key)
+    if build is None:
+        raise KeyError(f"unknown suite scenario {key!r}; have "
+                       f"{list(_REGISTRY)}")
+    return build(full, n_cores)

@@ -58,6 +58,32 @@ def test_engines_bit_identical(trace_kind, policy, gqa):
     assert_results_equal(ref, got)
 
 
+@pytest.mark.parametrize("policy,per_tenant", [
+    ("lru", False), ("at+dbp", False), ("at+bypass", False),
+    ("at+bypass", True), ("all", True),
+])
+def test_engines_bit_identical_on_composite(policy, per_tenant):
+    """Multi-tenant composites: the shared round ledger keeps both
+    engines bit-identical including the per-tenant counter attribution
+    and the (opt-in) per-tenant gear controller."""
+    from repro.core.workloads import DecodeWorkload
+    from repro.dataflows import (compose_time_sliced, decode_paged_spec,
+                                 fa2_spec, lower_to_trace)
+    wl = AttnWorkload("pf", 8, 4, 128, 512, group_alloc=TEMPORAL)
+    dec = DecodeWorkload(n_seqs=8, seq_len=512, n_steps=3, retire_step=2,
+                         n_short=4)
+    trace = lower_to_trace(compose_time_sliced(
+        [fa2_spec(wl, 4), decode_paged_spec(dec, 4)], quantum_rounds=8))
+    pol = named_policy(policy, per_tenant_gears=per_tenant)
+    ref = run_policy(trace, pol, CFG, engine="steps")
+    got = run_policy(trace, pol, CFG, engine="compiled")
+    assert_results_equal(ref, got)
+    assert got.tenants and got.tenants == ref.tenants
+    for f in ("hits", "mshr_hits", "cold_misses", "conflict_misses",
+              "bypassed", "writebacks"):
+        assert sum(t[f] for t in got.tenants.values()) == getattr(got, f)
+
+
 def test_multibatch_dbp_equivalence():
     wl = AttnWorkload("tiny-mb", n_q_heads=4, n_kv_heads=4, head_dim=128,
                       seq_len=1024, group_alloc=TEMPORAL, n_batches=2)

@@ -16,10 +16,11 @@ from repro.core.workloads import (SPATIAL, TEMPORAL, AttnWorkload,
                                   DecodeWorkload, MoEWorkload,
                                   PrefixShareWorkload, SpecDecodeWorkload,
                                   SSDScanWorkload)
-from repro.dataflows import (decode_paged_spec, fa2_spec, lower_to_counts,
-                             lower_to_trace, matmul_spec, mlp_chain_spec,
-                             moe_ffn_spec, prefix_share_spec,
-                             spec_decode_spec, ssd_scan_spec)
+from repro.dataflows import (compose_time_sliced, decode_paged_spec,
+                             fa2_spec, lower_to_counts, lower_to_trace,
+                             matmul_spec, mlp_chain_spec, moe_ffn_spec,
+                             prefix_share_spec, spec_decode_spec,
+                             ssd_scan_spec, tenant_regions)
 from repro.launch.roofline import _shape_bytes, _wire_factor, param_count
 
 
@@ -106,10 +107,17 @@ def test_prediction_positive_and_counts_consistent(seq, kv, alloc):
 # (bytes touched, line accesses, flops, rounds) — one description, no
 # hand-synced twins.
 # ---------------------------------------------------------------------------
-def _random_spec(draw):
-    kind = draw(st.sampled_from(["fa2", "matmul", "decode", "moe", "mlp",
-                                 "specdec", "ssd", "prefix"]))
+def _random_spec(draw, kinds=("fa2", "matmul", "decode", "moe", "mlp",
+                              "specdec", "ssd", "prefix", "compose")):
+    kind = draw(st.sampled_from(kinds))
     n_cores = draw(st.sampled_from([2, 4]))
+    if kind == "compose":
+        base = tuple(k for k in kinds if k != "compose")
+        n_tenants = draw(st.integers(2, 3))
+        tenants = [_random_spec(draw, kinds=base)
+                   for _ in range(n_tenants)]
+        return compose_time_sliced(
+            tenants, quantum_rounds=draw(st.sampled_from([2, 8, 32])))
     if kind == "fa2":
         kv = draw(st.sampled_from([1, 2, 4]))
         gs = draw(st.sampled_from([1, 2, 4]))
@@ -215,6 +223,60 @@ def test_profile_reuse_mass_equals_closed_form_counts(data):
     # live+dead split partitions every distance; MSHR mass is distance 0
     assert (prof.e_dlive >= 0).all() and (prof.e_ddead >= 0).all()
     assert int((prof.e_dlive + prof.e_ddead)[prof.e_mshr].sum()) == 0
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant invariants (DESIGN.md §8.4): for random 2–3-tenant
+# composites, per-tenant simulator counters sum to the global stats,
+# the composite reuse profile's per-tenant masses recount to the
+# totals, and tenant address regions round-trip without overlap.
+# ---------------------------------------------------------------------------
+def _random_composite(draw):
+    base = ("fa2", "matmul", "decode", "moe", "mlp", "specdec", "ssd",
+            "prefix")
+    tenants = [_random_spec(draw, kinds=base)
+               for _ in range(draw(st.integers(2, 3)))]
+    return compose_time_sliced(
+        tenants, quantum_rounds=draw(st.sampled_from([2, 8, 32])))
+
+
+@settings(max_examples=12, deadline=None)
+@given(data=st.data())
+def test_composite_tenant_conservation(data):
+    from repro.core import SimConfig, named_policy, run_policy
+
+    spec = _random_composite(data.draw)
+    # regions: disjoint, aligned, and covering every tensor
+    regions = tenant_regions(spec)
+    for (_, _, e0), (_, b1, _) in zip(regions, regions[1:]):
+        assert e0 <= b1
+    for _, base, _ in regions:
+        assert base % spec.tenant_region_align == 0
+
+    counts = lower_to_counts(spec)
+    prof = counts.reuse_profile
+    n_t = spec.n_tenants
+    # interleaving-aware recount: per-tenant profile masses sum to the
+    # composite totals (and bypass/cold masses partition likewise)
+    e_ten = prof.e_tenant
+    assert (sum(int(prof.e_mass[e_ten == i].sum()) for i in range(n_t))
+            == prof.total_reuse_mass())
+    assert int(prof.cold_rt.sum()) == counts.n_kv_distinct
+    assert (int(prof.byp_cold_rt.sum() + prof.byp_rep_rt.sum())
+            == counts.n_bypass_lines)
+
+    pol = data.draw(st.sampled_from(["lru", "at+dbp", "at+bypass"]))
+    per_tenant = data.draw(st.booleans())
+    hw = SimConfig(n_cores=spec.n_cores, llc_bytes=256 * 1024,
+                   llc_slices=8)
+    res = run_policy(lower_to_trace(spec),
+                     named_policy(pol, per_tenant_gears=per_tenant), hw,
+                     record_history=False)
+    assert set(res.tenants) == set(spec.tenant_names)
+    for key in ("hits", "mshr_hits", "cold_misses", "conflict_misses",
+                "bypassed", "writebacks"):
+        assert (sum(t[key] for t in res.tenants.values())
+                == getattr(res, key)), key
 
 
 # ---------------------------------------------------------------------------
