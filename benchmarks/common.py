@@ -38,9 +38,16 @@ def policy_sweep(trace, policies: Iterable[str], cfg,
     return dict(zip(names, results))
 
 
-def emit(name: str, us_per_call: float, derived: str) -> None:
-    ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
-                 "derived": derived})
+def emit(name: str, us_per_call: float, derived: str, **extra) -> None:
+    """Print one harness CSV row and buffer it for ``--json``; keyword
+    extras (e.g. ``scenarios=12, seconds_per_scenario=...``) become
+    additional machine-readable fields on the JSON row without touching
+    the CSV contract."""
+    row: Dict[str, object] = {"name": name,
+                              "us_per_call": round(us_per_call, 1),
+                              "derived": derived}
+    row.update(extra)
+    ROWS.append(row)
     print(f"{name},{us_per_call:.1f},{derived}")
 
 

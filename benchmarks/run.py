@@ -63,7 +63,10 @@ def main(argv=None) -> None:
             print(f"{name},0,ERROR:{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
     if args.json is not None:
-        path = common.save_rows(args.json, full=args.full, failed=failed)
+        from repro.dataflows import registry_keys
+        path = common.save_rows(args.json, full=args.full, failed=failed,
+                                scenario_count=len(registry_keys()),
+                                registry_keys=registry_keys())
         print(f"# rows written to {path}", file=sys.stderr)
     if failed:
         raise SystemExit(f"failed: {failed}")

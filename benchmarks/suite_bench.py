@@ -4,7 +4,7 @@ policy set, cross-validated against the analytical model (§V-D/§VI-G).
 For each :class:`~repro.dataflows.SuiteCase` the spec is lowered once and
 swept under ``SUITE_POLICIES`` via the batched ``run_policies`` API; the
 same spec is lowered to counts (with the reuse-distance profile attached)
-and fed to ``predict`` under **both** hit engines side by side —
+and fed to the model under **both** hit engines side by side —
 ``model="profile"`` (the IR-derived reuse-distance histogram, DESIGN.md
 §5) and ``model="closed"`` (the §V-C scalar step functions) — each with
 its own θ/λ calibration on the suite's simulator points.  Because
@@ -13,26 +13,55 @@ fitting on the very points you report error for flatters the model, a
 held out and reports the honest out-of-sample error next to the
 train-fit one.
 
+The suite is the fast path (DESIGN.md §8.5): independent cases run in a
+process pool (``REPRO_SUITE_SERIAL=1`` forces in-process sweeps), each
+worker leans on the content-addressed artifact cache for its lowerings,
+the calibration is the θ-batched ``fit_params`` (bit-identical to the
+sequential scan), and every prediction row comes from ``predict_batch``
+over the scenario's shared reuse histogram.  Per-case seconds and
+suite-seconds-per-scenario are recorded in the emitted row and the saved
+report; scripts/suite_gate.py gates the per-scenario budget.
+
 The saved table reports, per scenario × policy: simulated cycles, hit
 rate, speedup over LRU, and per engine the predicted cycles plus
 train-fit and LOSO relative errors — plus the DBP-vs-LRU speedups the
 decode / MoE / speculative-decoding scenarios exist to demonstrate.
 
-Run a single scenario (CI smoke): ``python -m benchmarks.suite_bench
---scenario decode-paged``  (LOSO needs ≥ 2 scenarios and is skipped).
+Run a single scenario (CI smoke — still through the pool driver):
+``python -m benchmarks.suite_bench --scenario decode-paged``
+(LOSO needs ≥ 2 scenarios and is skipped).
 """
 
 from __future__ import annotations
 
+import os
+import time
+from concurrent.futures import ProcessPoolExecutor
+from dataclasses import dataclass, field
+
 import numpy as np
 
-from repro.core import fit_params, named_policy, predict, run_policies
-from repro.dataflows import (SUITE_POLICIES, build_suite, lower_to_counts,
-                             lower_to_trace, suite_case)
+from repro.core import (fit_params, named_policy, predict_batch,
+                        run_policies)
+from repro.dataflows import (SUITE_POLICIES, lower_to_counts,
+                             lower_to_trace, registry_keys, suite_case)
 
 from .common import Timer, emit, save
 
 MODELS = ("closed", "profile")
+
+
+@dataclass
+class _CaseResult:
+    """One scenario's sweep output — everything the parent process needs
+    (rows, calibration points, timing); the trace and spec stay in the
+    worker."""
+    key: str
+    cfg: object
+    expect_dbp_win: bool
+    rows: dict = field(default_factory=dict)
+    fit_points: list = field(default_factory=list)
+    seconds: float = 0.0
 
 
 def _sweep_case(case, table, fit_points):
@@ -64,48 +93,100 @@ def _sweep_case(case, table, fit_points):
     return counts
 
 
+def _case_worker(args) -> _CaseResult:
+    """Build and sweep exactly one registered scenario (the process-pool
+    unit of work)."""
+    key, full = args
+    t0 = time.perf_counter()
+    case = suite_case(key, full=full)
+    out = _CaseResult(key, case.cfg, case.expect_dbp_win)
+    _sweep_case(case, out.rows, out.fit_points)
+    for _, (counts, *_rest) in out.fit_points:
+        prof = counts.reuse_profile
+        if prof is not None:
+            # derived per-policy caches are rebuilt by the parent's
+            # calibration — don't ship them across the pipe
+            prof._eval_cache.clear()
+    out.seconds = time.perf_counter() - t0
+    return out
+
+
+def _run_cases(keys, full):
+    """Sweep the cases through a process pool (registry order preserved);
+    ``REPRO_SUITE_SERIAL=1`` — or any pool failure — falls back to
+    in-process sweeps."""
+    tasks = [(k, full) for k in keys]
+    if os.environ.get("REPRO_SUITE_SERIAL") == "1":
+        return [_case_worker(t) for t in tasks]
+    try:
+        import multiprocessing
+        ctx = multiprocessing.get_context("fork")
+        workers = min(len(tasks), os.cpu_count() or 1)
+        with ProcessPoolExecutor(max_workers=workers,
+                                 mp_context=ctx) as pool:
+            return list(pool.map(_case_worker, tasks))
+    except Exception:
+        # the pool is an optimization, never a correctness dependency
+        return [_case_worker(t) for t in tasks]
+
+
 def _record_errors(table, fit_points, hw, params, model, col):
     """Predict every row under ``params``/``model`` and append the
     ``model_cycles_*`` / ``model_rel_err_*`` columns; returns per-scenario
-    mean errors."""
+    mean errors.  Rows sharing one scenario's counts evaluate in a single
+    ``predict_batch`` call over the whole policy set."""
     errs = {}
-    for row_key, (counts, llc, pol, variant, gqa, rounds, target) \
-            in fit_points:
-        row = table[row_key]
-        pred = predict(counts, llc, pol, hw, params, variant, gqa,
-                       n_rounds=rounds, model=model)
-        row[f"model_cycles_{col}"] = pred.cycles
-        row[f"model_rel_err_{col}"] = abs(pred.cycles - target) / target
-        if model == "profile" and not col.startswith("loso"):
-            # dirty-lifetime term: predicted write-back line volume next
-            # to the simulator's (closed forms carry no such term)
-            row["model_writebacks"] = pred.n_wb
-            if pred.n_miss_tenant is not None:
-                row["model_tenant_misses"] = list(pred.n_miss_tenant)
-                row["model_tenant_writebacks"] = list(pred.n_wb_tenant)
-        errs.setdefault(row["scenario"], []).append(
-            row[f"model_rel_err_{col}"])
+    i = 0
+    while i < len(fit_points):
+        counts, llc, _, variant, gqa, rounds, _ = fit_points[i][1]
+        j = i
+        pols = []
+        while j < len(fit_points):
+            c2, l2, p2, v2, g2, r2, _ = fit_points[j][1]
+            if (c2 is not counts or l2 != llc or v2 != variant
+                    or g2 != gqa or r2 != rounds):
+                break
+            pols.append(p2)
+            j += 1
+        preds = predict_batch(counts, llc, pols, hw, params, variant, gqa,
+                              n_rounds=rounds, model=model)
+        for (row_key, pt), pred in zip(fit_points[i:j], preds):
+            target = pt[6]
+            row = table[row_key]
+            row[f"model_cycles_{col}"] = pred.cycles
+            row[f"model_rel_err_{col}"] = abs(pred.cycles - target) / target
+            if model == "profile" and not col.startswith("loso"):
+                # dirty-lifetime term: predicted write-back line volume
+                # next to the simulator's (closed forms carry no such
+                # term)
+                row["model_writebacks"] = pred.n_wb
+                if pred.n_miss_tenant is not None:
+                    row["model_tenant_misses"] = list(pred.n_miss_tenant)
+                    row["model_tenant_writebacks"] = list(pred.n_wb_tenant)
+            errs.setdefault(row["scenario"], []).append(
+                row[f"model_rel_err_{col}"])
+        i = j
     return {k: float(np.mean(v)) for k, v in errs.items()}
 
 
-def _validate(cases, table, fit_points):
+def _validate(results, table, fit_points):
     """§V-D calibration under both hit engines, plus the honest
     leave-one-scenario-out refits."""
-    hw = cases[0].cfg
+    hw = results[0].cfg
     errs, fitted = {}, {}
     for model in MODELS:
         params = fit_params([p for _, p in fit_points], hw, model=model)
         fitted[model] = params
         errs[model] = _record_errors(table, fit_points, hw, params, model,
                                      model)
-        if len(cases) < 2:
+        if len(results) < 2:
             continue
         loso_errs = {}
-        for case in cases:
+        for res in results:
             train = [p for k, p in fit_points
-                     if table[k]["scenario"] != case.key]
+                     if table[k]["scenario"] != res.key]
             test = [(k, p) for k, p in fit_points
-                    if table[k]["scenario"] == case.key]
+                    if table[k]["scenario"] == res.key]
             loso = fit_params(train, hw, model=model)
             loso_errs.update(
                 _record_errors(table, test, hw, loso, model,
@@ -119,31 +200,48 @@ def run(full: bool = False, scenario: str | None = None) -> dict:
     fit_points: list = []
     with Timer() as t:
         if scenario is not None:
-            cases = [suite_case(scenario, full=full)]
+            if scenario not in registry_keys():
+                suite_case(scenario)   # raises the canonical KeyError
+            keys = [scenario]
         else:
-            cases = build_suite(full=full)
-        for case in cases:
-            _sweep_case(case, table, fit_points)
-        errs, fitted = _validate(cases, table, fit_points)
+            keys = registry_keys()
+        results = _run_cases(keys, full)
+        for res in results:
+            table.update(res.rows)
+            fit_points.extend(res.fit_points)
+        t0 = time.perf_counter()
+        errs, fitted = _validate(results, table, fit_points)
+        validate_seconds = time.perf_counter() - t0
 
     parts = []
     for key in ("profile", "closed", "loso_profile"):
         if key in errs:
             mean = float(np.mean(list(errs[key].values())))
             parts.append(f"model_err_mean_{key}={mean:.3f}")
-    for case in cases:
-        if case.expect_dbp_win:
-            dbp = table[f"{case.key}-at+dbp"]["speedup_vs_lru"]
-            parts.append(f"{case.key}_dbp_vs_lru={dbp:.2f}x")
-    emit("suite_bench", t.elapsed_us, ";".join(parts))
+    for res in results:
+        if res.expect_dbp_win:
+            dbp = table[f"{res.key}-at+dbp"]["speedup_vs_lru"]
+            parts.append(f"{res.key}_dbp_vs_lru={dbp:.2f}x")
+    total_seconds = t.elapsed_us / 1e6
+    seconds_per_scenario = total_seconds / max(len(results), 1)
+    emit("suite_bench", t.elapsed_us, ";".join(parts),
+         scenarios=len(results),
+         seconds_per_scenario=round(seconds_per_scenario, 3))
     save("suite_bench", {
         "rows": table,
-        "dbp_win_scenarios": [c.key for c in cases if c.expect_dbp_win],
+        "dbp_win_scenarios": [r.key for r in results if r.expect_dbp_win],
+        "registry_keys": registry_keys(),
         "model_rel_err_by_scenario": errs,
         "fitted_params": {
             model: {"theta1": p.theta1, "theta2": p.theta2,
                     "theta3": p.theta3, "lam": p.lam}
             for model, p in fitted.items()},
+        "perf": {
+            "total_seconds": total_seconds,
+            "seconds_per_scenario": seconds_per_scenario,
+            "validate_seconds": validate_seconds,
+            "case_seconds": {r.key: r.seconds for r in results},
+        },
     })
     return table
 

@@ -56,5 +56,23 @@ def run(full: bool = False) -> dict:
     }
     emit("sweep_perf", t_batch.elapsed_us,
          f"speedup_vs_step_engine={speedup:.2f}x;bit_identical=yes")
+
+    # suite throughput probe: two representative scenarios through the
+    # process-pool suite driver (the exact path suite_bench takes) — the
+    # cross-PR record of suite-seconds-per-scenario that
+    # scripts/suite_gate.py budgets on the full report
+    from .suite_bench import _run_cases
+    probe = ("matmul", "decode-paged")
+    with Timer() as t_suite:
+        results = _run_cases(list(probe), full=False)
+    suite_sps = t_suite.elapsed_us / 1e6 / max(len(results), 1)
+    table["suite_probe"] = {
+        "scenarios": list(probe),
+        "seconds_per_scenario": suite_sps,
+        "case_seconds": {r.key: r.seconds for r in results},
+    }
+    emit("sweep_perf_suite", t_suite.elapsed_us,
+         f"suite_seconds_per_scenario={suite_sps:.2f}",
+         seconds_per_scenario=round(suite_sps, 3))
     save("sweep_perf", table)
     return table

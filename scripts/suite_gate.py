@@ -36,6 +36,10 @@ EXPECTED_DBP_WINS = ("decode-paged", "moe-ffn", "spec-decode", "ssd-scan",
 SSD_SCAN_MIN_DBP = 1.10
 #: regression margin for the multi-tenant spec+ssd mix (measured 1.12x)
 MT_SPEC_SSD_MIN_DBP = 1.05
+#: wall budget per scenario for the pooled suite driver (measured ~1.2 s
+#: per scenario on one CI core; the pre-streaming sweep was ~20 s per
+#: scenario) — gated whenever the report carries a perf record
+MAX_SECONDS_PER_SCENARIO = 6.0
 
 path = sys.argv[1] if len(sys.argv) > 1 else \
     "reports/benchmarks/suite_bench.json"
@@ -90,6 +94,17 @@ for row_key, row in report["rows"].items():
         sys.exit(f"{row_key}: per-tenant hit mass does not reproduce "
                  f"the row's hit rate")
 
+# suite throughput: the sweep must stay the fast path (DESIGN.md §8.5)
+perf = report.get("perf")
+sps = None
+if perf is not None:
+    sps = float(perf["seconds_per_scenario"])
+    if sps > MAX_SECONDS_PER_SCENARIO:
+        sys.exit(f"suite throughput regressed: {sps:.2f} s per scenario "
+                 f"> {MAX_SECONDS_PER_SCENARIO} s budget "
+                 f"(case seconds: {perf.get('case_seconds')})")
+
 print(f"suite gate OK on {scenarios}: profile {prof:.3f} <= "
       f"max(closed {closed:.3f}, {ABS_OK}); dbp wins {flagged}; "
-      f"{n_tenant_rows} multi-tenant rows conserve")
+      f"{n_tenant_rows} multi-tenant rows conserve"
+      + (f"; {sps:.2f} s/scenario" if sps is not None else ""))

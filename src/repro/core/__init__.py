@@ -3,7 +3,7 @@ model, and the TPU-side cache orchestrator."""
 
 from .analytical import (ModelParams, Prediction, fit_params,
                          gear_trajectory, kendall_tau, kept_fraction,
-                         predict, r_squared)
+                         predict, predict_batch, r_squared)
 from .cache import CacheGeometry, SharedLLC
 from .orchestrator import CacheOrchestrator, OrchestrationPlan
 from .policies import PolicyConfig, named_policy
@@ -18,7 +18,8 @@ from .workloads import (PAPER_WORKLOADS, SPATIAL, TEMPORAL, AttnWorkload,
 
 __all__ = [
     "ModelParams", "Prediction", "fit_params", "gear_trajectory",
-    "kendall_tau", "kept_fraction", "predict", "r_squared",
+    "kendall_tau", "kept_fraction", "predict", "predict_batch",
+    "r_squared",
     "CacheGeometry", "SharedLLC",
     "CacheOrchestrator", "OrchestrationPlan",
     "PolicyConfig", "named_policy",

@@ -32,7 +32,7 @@ Execution engines:
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, Iterable, List, Optional, Tuple, Union
 
 import numpy as np
@@ -299,12 +299,17 @@ class Simulator:
         return geom, tmu, llc
 
     def run(self, trace: Trace, record_history: bool = True,
-            *, engine: str = "compiled") -> SimResult:
+            *, engine: str = "compiled",
+            chunk_lines: Optional[int] = None) -> SimResult:
         """Simulate ``trace`` under this simulator's policy.
 
         ``engine="compiled"`` (default) drives the cached
         :class:`~repro.core.traces.CompiledTrace`; ``engine="steps"``
         re-walks the Python step lists (reference oracle).
+        ``chunk_lines`` switches the compiled engine to streaming mode:
+        the trace is lowered in whole-round CSR segments of at most that
+        many pre-merge line requests, fed incrementally to the same
+        round loop — bit-identical counters, bounded lowering memory.
         """
         if self.cfg.line_bytes != trace.line_bytes:
             # traces bake line granularity into their addresses; a
@@ -314,25 +319,50 @@ class Simulator:
                 f"SimConfig.line_bytes={self.cfg.line_bytes} does not "
                 f"match trace line_bytes={trace.line_bytes}")
         if engine == "compiled":
-            return self._run_compiled(trace, record_history)
+            return self._run_compiled(trace, record_history, chunk_lines)
         if engine == "steps":
+            if chunk_lines is not None:
+                raise ValueError("chunk_lines requires engine='compiled'")
             return self._run_steps(trace, record_history)
         raise ValueError(f"unknown engine {engine!r}")
 
     # ------------------------------------------------------------------
     # compiled engine: slice flat per-round arrays
     # ------------------------------------------------------------------
-    def _run_compiled(self, trace: Trace, record_history: bool) -> SimResult:
-        cfg = self.cfg
-        ct = trace.compiled(cfg.line_bytes)
-        geom, tmu, llc = self._fresh_state(trace)
-        plans = ct.plans_for(geom)
-        tll_tags = ct.tll_tags_for(geom)   # per-geometry, sweep-shared
+    def _run_compiled(self, trace: Trace, record_history: bool,
+                      chunk_lines: Optional[int] = None) -> SimResult:
+        if chunk_lines is None:
+            segments = (trace.compiled(self.cfg.line_bytes),)
+        else:
+            segments = trace.compiled_segments(self.cfg.line_bytes,
+                                               chunk_lines)
+        return self.run_segments(trace, segments, record_history)
 
-        seen = np.zeros(ct.n_seen_lines, dtype=bool)
+    def run_segments(self, trace: Trace, segments,
+                     record_history: bool = True) -> SimResult:
+        """Streaming entry point: consume :class:`CompiledTrace`
+        segments incrementally against one persistent cache/TMU/ledger
+        state.  Cache state, the global seen bitmap, and the gear
+        controller all persist across segment boundaries, so the result
+        is bit-identical to a monolithic run — this is the hook the
+        serving-replay path (``repro.serve``) uses to drive traces too
+        large to materialize up front."""
+        cfg = self.cfg
+        geom, tmu, llc = self._fresh_state(trace)
         gqa = self.policy.gqa_variant
         led = _RoundLedger(self, llc, trace, record_history)
+        seen = None
+        for ct in segments:
+            if seen is None:
+                # the dense seen-bitmap layout is global across segments
+                seen = np.zeros(ct.n_seen_lines, dtype=bool)
+            self._consume_segment(ct, geom, tmu, llc, led, seen, gqa)
+        return led.result(trace, self.policy.name, cfg.freq_ghz)
 
+    def _consume_segment(self, ct, geom, tmu, llc, led, seen,
+                         gqa) -> None:
+        plans = ct.plans_for(geom)
+        tll_tags = ct.tll_tags_for(geom)   # per-geometry, sweep-shared
         round_off = ct.round_off
         tll_off = ct.tll_off
         for r in range(ct.n_rounds):
@@ -363,8 +393,6 @@ class Simulator:
                                     tll_tags[t0:t1], ct.tll_nacc[t0:t1])
             led.end_round(codes, ct.u_addrs[sel], ct.u_dups[sel],
                           float(ct.flops_round[r]))
-
-        return led.result(trace, self.policy.name, cfg.freq_ghz)
 
     # ------------------------------------------------------------------
     # step engine: reference implementation over Python Step lists
@@ -484,7 +512,8 @@ def run_policy(trace: Trace, policy: PolicyLike,
 def run_policies(trace: Trace, policies: Iterable[PolicyLike],
                  cfg: Optional[SimConfig] = None,
                  record_history: bool = False,
-                 tmu_params: Optional[TMUParams] = None) -> List[SimResult]:
+                 tmu_params: Optional[TMUParams] = None,
+                 capacities: Optional[Iterable[int]] = None):
     """Batch policy sweep over one trace (the paper's figure workflow).
 
     The trace is lowered once (``trace.compiled``) and the lowering —
@@ -492,11 +521,27 @@ def run_policies(trace: Trace, policies: Iterable[PolicyLike],
     so sweeping N policies costs one compile plus N fast vectorized runs
     instead of N Python trace walks.  Results come back in input order
     with counters bit-identical to individual :func:`run_policy` calls.
+
+    ``capacities`` adds a capacity axis (the §VI capacity sweeps):
+    ``cfg.llc_bytes`` is replaced by each entry and the return value
+    becomes a nested list indexed ``[policy][capacity]``.  Plans are
+    cached per :class:`~repro.core.cache.CacheGeometry` on the shared
+    compiled trace, so the P×C sweep still compiles once and sorts each
+    distinct geometry once.
     """
     cfg = cfg or SimConfig()
     trace.compiled(cfg.line_bytes)       # build once, shared by all runs
+    pols = [_resolve_policy(p) for p in policies]
+    if capacities is None:
+        return [
+            Simulator(cfg, p, tmu_params).run(
+                trace, record_history=record_history)
+            for p in pols
+        ]
+    caps = list(capacities)
     return [
-        Simulator(cfg, _resolve_policy(p), tmu_params).run(
+        [Simulator(replace(cfg, llc_bytes=int(c)), p, tmu_params).run(
             trace, record_history=record_history)
-        for p in policies
+         for c in caps]
+        for p in pols
     ]

@@ -67,8 +67,14 @@ class Trace:
     # the tenants' (disjoint, region-aligned) address ranges
     tenant_of_tensor: Optional[Dict[int, int]] = None
     tenant_names: Optional[List[str]] = None
+    # deterministic content hash of the DataflowSpec this trace was
+    # lowered from (repro.dataflows.artifacts); None for hand-built
+    # traces.  Keys the on-disk artifact cache for compiled lowerings.
+    fingerprint: Optional[str] = None
     _compiled: Dict[int, "CompiledTrace"] = field(
         default_factory=dict, init=False, repr=False, compare=False)
+    _line_counts: Optional[np.ndarray] = field(
+        default=None, init=False, repr=False, compare=False)
 
     @property
     def n_cores(self) -> int:
@@ -126,9 +132,84 @@ class Trace:
                 f"line_bytes={lb}")
         ct = self._compiled.get(lb)
         if ct is None:
-            ct = CompiledTrace.build(self, lb)
+            key = None
+            if self.fingerprint is not None:
+                from repro.dataflows import artifacts
+                if artifacts.artifacts_enabled():
+                    key = artifacts.compiled_trace_key(self.fingerprint, lb)
+                    ct = artifacts.load_compiled_trace(key)
+            if ct is None:
+                ct = CompiledTrace.build(self, lb)
+                if key is not None:
+                    from repro.dataflows import artifacts
+                    artifacts.store_compiled_trace(key, ct)
+            ct.cache_key = key
             self._compiled[lb] = ct
         return ct
+
+    # ------------------------------------------------------------------
+    def _round_line_counts(self) -> np.ndarray:
+        """Pre-merge line-request count per round (== the compiled
+        ``n_acc_round``), computed from the step lists alone so segment
+        boundaries can be chosen without materializing the full
+        lowering."""
+        if self._line_counts is None:
+            lb = self.line_bytes
+            counts = np.zeros(self.n_rounds, dtype=np.int64)
+            tensors = self.tensors
+            for steps in self.core_steps:
+                for r, step in enumerate(steps):
+                    for tid, _ in step.loads:
+                        counts[r] += tensors[tid].tile_bytes // lb
+                    for tid, _ in step.stores:
+                        counts[r] += tensors[tid].tile_bytes // lb
+            self._line_counts = counts
+        return self._line_counts
+
+    def compiled_segments(self, line_bytes: int = 0,
+                          chunk_lines: int = 1 << 20):
+        """Chunked mode of :meth:`compiled`: lower the rounds into
+        fixed-size CSR segments and yield them incrementally.
+
+        Segments pack whole rounds greedily up to ``chunk_lines``
+        pre-merge line requests each; rounds are atomic (the MSHR merge
+        and same-set pass splitting never cross a round boundary), so a
+        single round larger than the budget becomes its own segment and
+        the concatenation of the segment arrays is exactly the
+        monolithic lowering.  When the full lowering is already cached
+        the segments are zero-copy slices of it; otherwise each window
+        is built directly from its round range, so streaming consumers
+        (the serving-replay path) never hold more than one window of
+        per-line arrays.
+        """
+        lb = line_bytes or self.line_bytes
+        if lb != self.line_bytes:
+            raise ValueError(
+                f"cannot compile a {self.line_bytes}-byte-line trace at "
+                f"line_bytes={lb}")
+        if chunk_lines <= 0:
+            raise ValueError("chunk_lines must be positive")
+        bounds = _segment_bounds(self._round_line_counts(), chunk_lines)
+        full = self._compiled.get(lb)
+        for r0, r1 in zip(bounds[:-1], bounds[1:]):
+            if full is not None:
+                yield full.slice_rounds(r0, r1)
+            else:
+                yield CompiledTrace.build(self, lb, r0, r1)
+
+
+def _segment_bounds(line_counts: np.ndarray, chunk_lines: int) -> List[int]:
+    """Round indices cutting a trace into whole-round segments of at most
+    ``chunk_lines`` pre-merge line requests (always >= 1 round each)."""
+    bounds = [0]
+    acc = 0
+    for r, c in enumerate(line_counts.tolist()):
+        if acc and acc + c > chunk_lines:
+            bounds.append(r)
+            acc = 0
+        acc += c
+    bounds.append(int(line_counts.shape[0]))
+    return bounds
 
 
 class CompiledTrace:
@@ -181,13 +262,31 @@ class CompiledTrace:
         self.tll_tiles = tll_tiles
         self.tll_nacc = tll_nacc
         self.tll_off = tll_off
+        # artifact-cache key ("<spec-fingerprint>-lb<N>") when this
+        # lowering came from a fingerprinted trace; lets plans_for
+        # persist its geometry plans too
+        self.cache_key: Optional[str] = None
         self._plans: Dict[Tuple[int, bool], list] = {}
         self._tll_tags: Dict[int, np.ndarray] = {}
 
     # ------------------------------------------------------------------
     @classmethod
-    def build(cls, trace: Trace, line_bytes: int) -> "CompiledTrace":
-        n_rounds = trace.n_rounds
+    def build(cls, trace: Trace, line_bytes: int, round_start: int = 0,
+              round_stop: Optional[int] = None) -> "CompiledTrace":
+        """Lower ``trace`` (or the round window ``[round_start,
+        round_stop)`` of it) to the flat CSR arrays.
+
+        A window build touches only the step records of its own rounds —
+        the streaming path — and is bit-identical to the same rounds of
+        the monolithic lowering: the MSHR merge and the lexsort both
+        group by round, so no array element ever crosses a round
+        boundary.  The dense seen-bitmap layout stays global
+        (``n_seen_lines`` covers every tensor) so one bitmap spans all
+        segments of a run.
+        """
+        if round_stop is None:
+            round_stop = trace.n_rounds
+        n_rounds = round_stop - round_start
         tensors = trace.tensors
         tr_lb = trace.line_bytes
 
@@ -214,18 +313,19 @@ class CompiledTrace:
         flops_round = np.zeros(n_rounds, dtype=np.float64)
 
         nonleader = [not l for l in trace.core_is_leader]
-        for r in range(n_rounds):
+        for r in range(round_start, round_stop):
+            rloc = r - round_start          # window-relative round index
             for c, steps in enumerate(trace.core_steps):
                 if r >= len(steps):
                     continue
                 step = steps[r]
-                flops_round[r] += step.flops
+                flops_round[rloc] += step.flops
                 for (tid, tile), is_store in (
                         [(l, False) for l in step.loads]
                         + [(s, True) for s in step.stores]):
                     meta = tensors[tid]
                     start = meta.base_addr + tile * meta.tile_bytes
-                    p_round.append(r)
+                    p_round.append(rloc)
                     p_start.append(start)
                     p_k.append(meta.tile_bytes // tr_lb)
                     p_dense0.append(dense_off[tid]
@@ -234,7 +334,7 @@ class CompiledTrace:
                     p_force.append(meta.bypass_all)
                     p_nonlead.append(nonleader[c])
                     if not is_store and not meta.bypass_all:
-                        t_round.append(r)
+                        t_round.append(rloc)
                         t_addr.append(meta.tile_last_line(tile, line_bytes))
                         t_tid.append(tid)
                         t_tile.append(tile)
@@ -301,6 +401,31 @@ class CompiledTrace:
         )
 
     # ------------------------------------------------------------------
+    def slice_rounds(self, round_start: int,
+                     round_stop: int) -> "CompiledTrace":
+        """Zero-copy round-window view: every per-line array is grouped
+        by round, so a segment is literally a slice of the monolithic
+        arrays with the CSR offsets rebased.  Used by
+        :meth:`Trace.compiled_segments` when the full lowering is
+        already cached."""
+        a0 = int(self.round_off[round_start])
+        a1 = int(self.round_off[round_stop])
+        t0 = int(self.tll_off[round_start])
+        t1 = int(self.tll_off[round_stop])
+        return CompiledTrace(
+            self.line_bytes, round_stop - round_start, self.n_seen_lines,
+            self.u_addrs[a0:a1], self.u_dense[a0:a1], self.u_write[a0:a1],
+            self.u_force[a0:a1], self.u_nonleader[a0:a1],
+            self.u_dups[a0:a1],
+            self.round_off[round_start:round_stop + 1] - a0,
+            self.n_acc_round[round_start:round_stop],
+            self.flops_round[round_start:round_stop],
+            self.tll_addrs[t0:t1], self.tll_tids[t0:t1],
+            self.tll_tiles[t0:t1], self.tll_nacc[t0:t1],
+            self.tll_off[round_start:round_stop + 1] - t0,
+        )
+
+    # ------------------------------------------------------------------
     def tll_tags_for(self, geom) -> np.ndarray:
         """Cache tags of the TLL feed for one geometry, cached like
         :meth:`plans_for` so a policy sweep computes them once."""
@@ -325,22 +450,36 @@ class CompiledTrace:
         sets_all = geom.set_of(self.u_addrs)
         tags_all = geom.tag_of(self.u_addrs)
         n = self.u_addrs.shape[0]
-        u_round = np.repeat(np.arange(self.n_rounds),
-                            np.diff(self.round_off))
-        # occurrence rank of each line's set within its round (stable):
-        # rank k goes into same-set pass k, replicating access_burst
-        order = np.lexsort((sets_all, u_round))
-        s_round = u_round[order]
-        s_sets = sets_all[order]
-        starts = np.ones(n, dtype=bool)
-        if n:
-            starts[1:] = (s_round[1:] != s_round[:-1]) \
-                | (s_sets[1:] != s_sets[:-1])
-        run_start = np.maximum.accumulate(
-            np.where(starts, np.arange(n), 0))
-        pass_sorted = np.arange(n) - run_start
-        pass_idx = np.empty(n, dtype=np.int64)
-        pass_idx[order] = pass_sorted
+        pk = None
+        pass_idx = None
+        if self.cache_key is not None:
+            from repro.dataflows import artifacts
+            pk = artifacts.plan_key(self.cache_key, geom.num_sets,
+                                    geom.hash_sets)
+            pass_idx = artifacts.load_plan_pass_idx(pk)
+            if pass_idx is not None and pass_idx.shape[0] != n:
+                pass_idx = None
+        if pass_idx is None:
+            u_round = np.repeat(np.arange(self.n_rounds),
+                                np.diff(self.round_off))
+            # occurrence rank of each line's set within its round
+            # (stable): rank k goes into same-set pass k, replicating
+            # access_burst
+            order = np.lexsort((sets_all, u_round))
+            s_round = u_round[order]
+            s_sets = sets_all[order]
+            starts = np.ones(n, dtype=bool)
+            if n:
+                starts[1:] = (s_round[1:] != s_round[:-1]) \
+                    | (s_sets[1:] != s_sets[:-1])
+            run_start = np.maximum.accumulate(
+                np.where(starts, np.arange(n), 0))
+            pass_sorted = np.arange(n) - run_start
+            pass_idx = np.empty(n, dtype=np.int64)
+            pass_idx[order] = pass_sorted
+            if pk is not None:
+                from repro.dataflows import artifacts
+                artifacts.store_plan_pass_idx(pk, pass_idx)
 
         plans = []
         for r in range(self.n_rounds):

@@ -7,6 +7,8 @@ description.  The scenario registry (``build_suite``) is the canonical
 entry point for sweeping every expressible dataflow.
 """
 
+from .artifacts import (artifacts_enabled, cache_dir, spec_fingerprint,
+                        try_spec_fingerprint)
 from .compose import compose_time_sliced, tenant_regions
 from .fa2 import fa2_spec, matmul_spec
 from .ir import DataflowSpec, SpecBuilder, StepSpec, TensorSpec
@@ -16,7 +18,8 @@ from .reuse import ReuseProfile, lower_to_reuse_profile
 from .scenarios import (decode_paged_spec, mlp_chain_spec, moe_ffn_spec,
                         prefix_share_spec, spec_decode_spec, ssd_scan_spec,
                         transformer_layer_spec)
-from .suite import SUITE_POLICIES, SuiteCase, build_suite, suite_case
+from .suite import (SUITE_POLICIES, SuiteCase, build_suite, registry_keys,
+                    suite_case)
 
 __all__ = [
     "DataflowSpec", "SpecBuilder", "StepSpec", "TensorSpec",
@@ -24,9 +27,12 @@ __all__ = [
     "assign_addresses", "lower_to_counts", "lower_to_plan",
     "lower_to_trace", "tmu_metadata",
     "ReuseProfile", "lower_to_reuse_profile",
+    "artifacts_enabled", "cache_dir", "spec_fingerprint",
+    "try_spec_fingerprint",
     "fa2_spec", "matmul_spec",
     "decode_paged_spec", "mlp_chain_spec", "moe_ffn_spec",
     "prefix_share_spec", "spec_decode_spec", "ssd_scan_spec",
     "transformer_layer_spec",
-    "SUITE_POLICIES", "SuiteCase", "build_suite", "suite_case",
+    "SUITE_POLICIES", "SuiteCase", "build_suite", "registry_keys",
+    "suite_case",
 ]

@@ -87,13 +87,16 @@ def lower_to_trace(spec: DataflowSpec) -> Trace:
     if spec.tenant_of_tensor is not None:
         tenant_of = {tid_of[n]: ten
                      for n, ten in spec.tenant_of_tensor.items()}
+    from .artifacts import artifacts_enabled, try_spec_fingerprint
     return Trace(name=spec.name, tensors=metas, core_steps=core_steps,
                  core_group=list(spec.core_group),
                  core_is_leader=list(spec.core_is_leader),
                  line_bytes=spec.line_bytes, workload=spec.workload,
                  tenant_of_tensor=tenant_of,
                  tenant_names=(list(spec.tenant_names)
-                               if spec.tenant_names else None))
+                               if spec.tenant_names else None),
+                 fingerprint=(try_spec_fingerprint(spec)
+                              if artifacts_enabled() else None))
 
 
 # ---------------------------------------------------------------------------
@@ -144,8 +147,16 @@ def lower_to_counts(spec: DataflowSpec,
 
     profile = None
     if with_profile:
+        from . import artifacts
         from .reuse import lower_to_reuse_profile
-        profile = lower_to_reuse_profile(spec)
+        fp = (artifacts.try_spec_fingerprint(spec)
+              if artifacts.artifacts_enabled() else None)
+        if fp is not None:
+            profile = artifacts.load_reuse_profile(fp)
+        if profile is None:
+            profile = lower_to_reuse_profile(spec)
+            if fp is not None:
+                artifacts.store_reuse_profile(fp, profile)
 
     return DataflowCounts(
         name=spec.name, line_bytes=spec.line_bytes,

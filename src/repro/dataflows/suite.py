@@ -50,6 +50,14 @@ class SuiteCase:
     #: scenarios where dead-block prediction must beat plain LRU
     expect_dbp_win: bool = False
 
+    @property
+    def fingerprint(self) -> str:
+        """Deterministic content hash of this case's spec — the
+        registry-level handle into the artifact cache
+        (``repro.dataflows.artifacts``)."""
+        from .artifacts import spec_fingerprint
+        return spec_fingerprint(self.spec)
+
 
 # ---------------------------------------------------------------------------
 # Case builders (lazy: invoked per requested case, not at import / lookup)
@@ -199,6 +207,11 @@ _REGISTRY: Dict[str, Callable[[bool, int], SuiteCase]] = {
     "mt-prefill-decode": _mt_prefill_decode,
     "mt-spec-ssd": _mt_spec_ssd,
 }
+
+
+def registry_keys() -> List[str]:
+    """Registered scenario keys, in suite order (no spec is built)."""
+    return list(_REGISTRY)
 
 
 def build_suite(full: bool = False, n_cores: int = 16) -> List[SuiteCase]:

@@ -241,3 +241,72 @@ def test_tmu_on_access_batch_matches_sequential():
     assert seq_tmu.dead_fifo.snapshot() == bat_tmu.dead_fifo.snapshot()
     assert seq_tmu._live == bat_tmu._live
     assert list(seq_tmu._live) == list(bat_tmu._live)   # LRU order too
+
+
+# ---------------------------------------------------------------------------
+# streaming (chunked) compilation: fixed-budget whole-round CSR segments
+# fed incrementally must be bit-identical to the monolithic lowering
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("chunk_lines", [1, 7, 333, 1 << 20])
+@pytest.mark.parametrize("policy", ["lru", "at+bypass", "all"])
+def test_chunked_compile_bit_identical(policy, chunk_lines):
+    pol = named_policy(policy)
+    mono = run_policy(build_fa2_trace(TINY_TEMPORAL, n_cores=4), pol, CFG)
+    # fresh trace: segments take the per-range build path (no cached
+    # full lowering to slice)
+    chunked = Simulator(CFG, pol).run(build_fa2_trace(TINY_TEMPORAL,
+                                                      n_cores=4),
+                                      chunk_lines=chunk_lines)
+    assert_results_equal(mono, chunked)
+
+
+def test_chunked_compile_slices_cached_lowering():
+    """With the full lowering already cached, segments are sliced views
+    of it — same counters, no rebuild."""
+    trace = build_fa2_trace(TINY_TEMPORAL, n_cores=4)
+    pol = named_policy("at+dbp")
+    mono = Simulator(CFG, pol).run(trace)      # populates trace.compiled
+    chunked = Simulator(CFG, pol).run(trace, chunk_lines=257)
+    assert_results_equal(mono, chunked)
+
+
+@pytest.mark.parametrize("chunk_lines", [1, 2, 3])
+def test_chunked_split_around_mshr_merge_round(chunk_lines):
+    """Chunk budgets small enough that every boundary candidate falls
+    next to the load+store merge round: rounds are atomic in the
+    segmenter, so the MSHR write-intent merge and the later dirty
+    write-back survive any chunk size."""
+    cfg = SimConfig(llc_bytes=1024, llc_assoc=2, llc_slices=4)
+    mono = run_policy(_load_store_merge_trace(), named_policy("lru"), cfg)
+    chunked = Simulator(cfg, named_policy("lru")).run(
+        _load_store_merge_trace(), chunk_lines=chunk_lines)
+    assert chunked.mshr_hits == 2 and chunked.writebacks > 0
+    assert_results_equal(mono, chunked)
+
+
+def test_chunked_compile_validation():
+    trace = build_matmul_trace(256, 256, 256, tile=128, n_cores=4)
+    with pytest.raises(ValueError, match="chunk_lines"):
+        list(trace.compiled_segments(128, 0))
+    with pytest.raises(ValueError, match="chunk_lines"):
+        Simulator(SimConfig(), named_policy("lru")).run(
+            trace, engine="steps", chunk_lines=64)
+
+
+# ---------------------------------------------------------------------------
+# run_policies capacity axis: [policy][capacity] nested sweep
+# ---------------------------------------------------------------------------
+def test_run_policies_capacity_axis():
+    trace = build_fa2_trace(TINY_TEMPORAL, n_cores=4)
+    pols = ["lru", "at+dbp"]
+    caps = [256 * 1024, 512 * 1024]
+    nested = run_policies(trace, pols, CFG, record_history=True,
+                          capacities=caps)
+    assert len(nested) == len(pols)
+    assert all(len(per_pol) == len(caps) for per_pol in nested)
+    for p, per_pol in zip(pols, nested):
+        for c, got in zip(caps, per_pol):
+            ref = run_policy(trace, named_policy(p),
+                             SimConfig(llc_bytes=c,
+                                       llc_slices=CFG.llc_slices))
+            assert_results_equal(ref, got)

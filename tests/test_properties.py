@@ -335,3 +335,35 @@ def test_param_counts_in_published_ballpark():
     for name, n in expected.items():
         got = param_count(get_arch(name))
         assert 0.6 * n < got < 1.5 * n, f"{name}: {got / 1e9:.2f}B vs {n}"
+
+
+# ---------------------------------------------------------------------------
+# Streaming compilation invariant: for every spec the suite can produce
+# and any chunk budget, the segment-fed compiled engine is bit-identical
+# to the monolithic lowering — counters, per-tenant attribution, and the
+# recorded gear history (boundaries that would split an MSHR-merge round
+# cannot exist: rounds are atomic in the segmenter).
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_chunked_compile_matches_monolithic(data):
+    from repro.core import SimConfig, Simulator, named_policy
+
+    spec = _random_spec(data.draw)
+    trace = lower_to_trace(spec)
+    pol = named_policy(
+        data.draw(st.sampled_from(["lru", "at+dbp", "at+bypass", "all"])))
+    hw = SimConfig(n_cores=spec.n_cores, llc_bytes=256 * 1024,
+                   llc_slices=8)
+    mono = Simulator(hw, pol).run(trace)
+    chunk = data.draw(st.sampled_from([1, 3, 17, 257, 4096, 1 << 20]))
+    chunked = Simulator(hw, pol).run(lower_to_trace(spec),
+                                     chunk_lines=chunk)
+    for key in ("cycles", "hits", "mshr_hits", "cold_misses",
+                "conflict_misses", "bypassed", "dram_lines", "writebacks",
+                "dead_evictions", "flops"):
+        assert getattr(mono, key) == getattr(chunked, key), key
+    assert mono.tenants == chunked.tenants
+    assert set(mono.history) == set(chunked.history)
+    for k in mono.history:
+        np.testing.assert_array_equal(mono.history[k], chunked.history[k])
