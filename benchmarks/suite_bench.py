@@ -42,7 +42,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core import (fit_params, named_policy, predict_batch,
-                        run_policies)
+                        run_policies, timeline_digest)
 from repro.dataflows import (SUITE_POLICIES, lower_to_counts,
                              lower_to_trace, registry_keys, suite_case)
 
@@ -69,7 +69,7 @@ def _sweep_case(case, table, fit_points):
     counts = lower_to_counts(case.spec)
     results = run_policies(
         trace, [named_policy(p, gqa=case.gqa) for p in SUITE_POLICIES],
-        case.cfg)
+        case.cfg, record_history=True)
     base = results[SUITE_POLICIES.index("lru")].cycles
     for pol, res in zip(SUITE_POLICIES, results):
         row = {
@@ -80,6 +80,9 @@ def _sweep_case(case, table, fit_points):
             "speedup_vs_lru": base / res.cycles,
             "dead_evictions": res.dead_evictions,
             "writebacks": res.writebacks,
+            # per-round series fingerprint (DESIGN.md §10): engines and
+            # reruns must reproduce the timeline bit-for-bit
+            "timeline_digest": timeline_digest(res.timeline),
         }
         if res.tenants:
             # per-tenant attribution columns (multi-tenant mixes,

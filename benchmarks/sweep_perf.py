@@ -74,5 +74,53 @@ def run(full: bool = False) -> dict:
     emit("sweep_perf_suite", t_suite.elapsed_us,
          f"suite_seconds_per_scenario={suite_sps:.2f}",
          seconds_per_scenario=round(suite_sps, 3))
+
+    # event-telemetry probe (DESIGN.md §10): emission must be zero-cost
+    # when disabled.  A/B the default config against an explicitly
+    # disabled one — the pair only diverges if the default path ever
+    # starts paying for telemetry (e.g. `trace_events` flipping on, or
+    # emission escaping its `sink is not None` guards) — and record the
+    # enabled path's cost for the cross-PR record.
+    probe_wl = get_workload("gemma3-27b", seq_len=512)
+    probe_trace = build_fa2_trace(probe_wl)
+    probe_trace.compiled(cfg.line_bytes)     # compile outside the timers
+
+    def _best_us(run_cfg, repeats=5):
+        times, res = [], None
+        for _ in range(repeats):
+            with Timer() as t:
+                res = run_policy(probe_trace, "at+dbp", run_cfg,
+                                 record_history=False)
+            times.append(t.elapsed_us)
+        return min(times), res
+
+    cfg_default = SimConfig(llc_bytes=4 * 2 ** 20)
+    cfg_off = SimConfig(llc_bytes=4 * 2 ** 20, trace_events=False)
+    cfg_on = SimConfig(llc_bytes=4 * 2 ** 20, trace_events=True)
+    default_us, res_default = _best_us(cfg_default)
+    off_us, _ = _best_us(cfg_off)
+    on_us, res_on = _best_us(cfg_on)
+    if res_default.events is not None:
+        raise AssertionError("default config emits events — telemetry "
+                             "must be opt-in")
+    overhead_off = default_us / off_us - 1.0
+    overhead_on = on_us / off_us - 1.0
+    # "~0%": a 10% margin absorbs timer noise on a shared CI core
+    if overhead_off > 0.10:
+        raise AssertionError(
+            f"event telemetry costs {overhead_off:+.1%} with tracing "
+            f"disabled (default {default_us:.0f}us vs off "
+            f"{off_us:.0f}us) — the disabled path must be free")
+    table["events_probe"] = {
+        "default_us": default_us,
+        "off_us": off_us,
+        "on_us": on_us,
+        "overhead_off": overhead_off,
+        "overhead_on": overhead_on,
+        "n_events_on": len(res_on.events),
+    }
+    emit("sweep_perf_events", on_us,
+         f"events_overhead_off={overhead_off:+.1%};"
+         f"events_overhead_on={overhead_on:+.1%}")
     save("sweep_perf", table)
     return table

@@ -1,0 +1,113 @@
+#!/usr/bin/env python
+"""Differential conformance gate: step vs compiled vs streaming engines.
+
+Runs the scenario×policy conformance matrix (``repro.conformance``) and
+verifies, per cell: (1) step and compiled engines agree on the canonical
+event stream, (2) the streaming/chunked compiled run concatenates
+bit-identically to the monolithic one, (3) the canonical digest matches
+the golden frozen under ``tests/golden/conformance_digests.json``.
+
+Any failure prints the first-divergence event with round + surrounding
+context and exits 1; ``--report`` additionally writes the full failure
+report as JSON (CI uploads it as an artifact).
+
+    PYTHONPATH=src python scripts/conformance.py                # full matrix
+    PYTHONPATH=src python scripts/conformance.py --smoke        # CI subset
+    PYTHONPATH=src python scripts/conformance.py --update-golden
+    PYTHONPATH=src python scripts/conformance.py \
+        --scenario matmul --policy lru dbp
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.conformance import (golden_path, load_golden, matrix_entries,
+                               run_matrix, save_golden)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="run only the CI smoke scenario subset")
+    ap.add_argument("--scenario", nargs="*", default=None,
+                    help="restrict the scenario axis")
+    ap.add_argument("--policy", nargs="*", default=None,
+                    help="restrict the policy axis")
+    ap.add_argument("--update-golden", action="store_true",
+                    help="refresh tests/golden/conformance_digests.json "
+                         "from this run instead of diffing against it")
+    ap.add_argument("--report", type=Path, default=None,
+                    help="write the JSON failure/summary report here")
+    ap.add_argument("--window", type=int, default=3,
+                    help="context events around a divergence (default 3)")
+    args = ap.parse_args(argv)
+
+    golden = None
+    if not args.update_golden:
+        golden = load_golden()
+        if golden is None:
+            print(f"warning: no golden digests at {golden_path()} (or "
+                  f"stale schema) — engine/streaming checks only; run "
+                  f"--update-golden to freeze them", file=sys.stderr)
+
+    entries = list(matrix_entries(smoke=args.smoke,
+                                  scenarios=args.scenario,
+                                  policies=args.policy))
+
+    def progress(cell):
+        status = "ok" if cell.ok else f"FAIL[{cell.failure}]"
+        print(f"  {cell.scenario:20s} {cell.policy:8s} "
+              f"{cell.n_events:9d} events  {cell.seconds:6.1f}s  {status}",
+              flush=True)
+
+    print(f"conformance matrix: {len(entries)} cells", flush=True)
+    results = run_matrix(entries, golden=golden, window=args.window)
+    for cell in results:
+        progress(cell)
+
+    failures = [r for r in results if not r.ok]
+
+    if args.update_golden:
+        # merge into the existing file so partial-matrix runs don't drop
+        # digests of cells they did not execute
+        merged = load_golden() or {}
+        for r in results:
+            if r.failure in (None, "golden", "missing-golden"):
+                merged[f"{r.scenario}/{r.policy}"] = r.digest
+        path = save_golden(merged)
+        print(f"froze {len(merged)} golden digests to {path}")
+        failures = [r for r in failures
+                    if r.failure not in ("golden", "missing-golden")]
+
+    if args.report is not None:
+        args.report.parent.mkdir(parents=True, exist_ok=True)
+        args.report.write_text(json.dumps({
+            "cells": [r.to_dict() for r in results],
+            "failures": len(failures),
+        }, indent=2) + "\n")
+        print(f"report written to {args.report}")
+
+    if failures:
+        print(f"\n{len(failures)} conformance failure(s):")
+        for r in failures:
+            print(f"\n== {r.scenario}/{r.policy}: {r.failure}")
+            if r.divergence is not None:
+                print(r.divergence.render())
+            elif r.failure == "golden":
+                print(f"  digest   {r.digest}\n  golden   {r.golden}")
+            elif r.failure == "missing-golden":
+                print(f"  digest {r.digest} has no frozen golden — run "
+                      f"--update-golden")
+        return 1
+    print(f"\nall {len(results)} cells conform")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,27 @@
+"""Differential conformance harness (DESIGN.md §10).
+
+Pins the repo's execution engines against each other at the *event*
+level: the step engine is the oracle, the compiled engine (monolithic
+and streaming/chunked) must reproduce its canonical event stream byte
+for byte on every registered suite scenario, and the resulting digests
+are frozen as goldens under ``tests/golden/``.  On mismatch the harness
+reports the first-divergence event with full context (round, expected
+vs actual, surrounding window) rather than a bare assert — the RTL-
+verification ``compare_traces`` idiom applied to the simulator stack.
+
+Entry points: ``scripts/conformance.py`` (CI gate + ``--update-golden``
+refresh) and ``scripts/trace_dump.py`` (render/export one run's
+events); the scenario×policy matrix lives in :mod:`.matrix` and grows
+automatically with ``repro.dataflows.suite``'s registry.
+"""
+
+from .compare import (CompareResult, Divergence, compare_scenario,
+                      first_divergence, golden_path, load_golden,
+                      run_matrix, save_golden)
+from .matrix import CONFORMANCE_POLICIES, SMOKE_SCENARIOS, matrix_entries
+
+__all__ = [
+    "CompareResult", "Divergence", "compare_scenario", "first_divergence",
+    "golden_path", "load_golden", "run_matrix", "save_golden",
+    "CONFORMANCE_POLICIES", "SMOKE_SCENARIOS", "matrix_entries",
+]

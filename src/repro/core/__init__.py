@@ -5,6 +5,10 @@ from .analytical import (ModelParams, Prediction, fit_params,
                          gear_trajectory, kendall_tau, kept_fraction,
                          predict, predict_batch, r_squared)
 from .cache import CacheGeometry, SharedLLC
+from .events import (COLUMNS as EVENT_COLUMNS, KIND_NAMES as EVENT_KINDS,
+                     SCHEMA_VERSION as EVENT_SCHEMA_VERSION, EventSink,
+                     canonical_order, decode_event, stream_digest,
+                     timeline_digest)
 from .orchestrator import CacheOrchestrator, OrchestrationPlan
 from .policies import PolicyConfig, named_policy
 from .simulator import (SimConfig, SimResult, Simulator, run_policies,
@@ -21,6 +25,8 @@ __all__ = [
     "kendall_tau", "kept_fraction", "predict", "predict_batch",
     "r_squared",
     "CacheGeometry", "SharedLLC",
+    "EVENT_COLUMNS", "EVENT_KINDS", "EVENT_SCHEMA_VERSION", "EventSink",
+    "canonical_order", "decode_event", "stream_digest", "timeline_digest",
     "CacheOrchestrator", "OrchestrationPlan",
     "PolicyConfig", "named_policy",
     "SimConfig", "SimResult", "Simulator", "run_policies", "run_policy",

@@ -20,6 +20,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from .events import EV_BYPASS, EV_EVICT, EV_FILL, EV_HIT, EV_WB
 from .policies import (BYPASS_DYNAMIC, BYPASS_NONE, BYPASS_STATIC,
                        GearController, PolicyConfig, make_controller)
 from .tmu import TMU
@@ -80,6 +81,17 @@ class CacheGeometry:
 
     def tag_of(self, line_addr: np.ndarray) -> np.ndarray:
         return (line_addr // self.line_bytes) // self.num_sets
+
+    def line_addr_of(self, set_idx: np.ndarray,
+                     tags: np.ndarray) -> np.ndarray:
+        """Inverse of ``(set_of, tag_of)``: reconstruct the byte address
+        of a resident line from its (set, tag).  Exact because the
+        Fibonacci fold XORs into a power-of-two index — used by the
+        event layer to attribute victims back to tensors/tenants."""
+        low = set_idx
+        if self.hash_sets:
+            low = (set_idx ^ (tags * 0x9E3779B1)) % self.num_sets
+        return (tags * self.num_sets + low) * self.line_bytes
 
     def slice_of_set(self, set_idx: np.ndarray) -> np.ndarray:
         return set_idx % self.n_slices
@@ -166,6 +178,10 @@ class SharedLLC:
             "writebacks": 0,
         }
         self._prio_mask = (1 << policy.b_bits) - 1 if policy.b_bits else 0
+        # opt-in event telemetry (repro.core.events.EventSink); every
+        # emission site is guarded by `sink is not None` so the hot path
+        # is untouched when tracing is off
+        self.sink = None
 
     # ------------------------------------------------------------------
     def tenant_of_tags(self, tags: np.ndarray) -> np.ndarray:
@@ -198,6 +214,7 @@ class SharedLLC:
         is_write=False,
         bypass_eligible=True,
         force_bypass=False,
+        cores=None,
     ) -> np.ndarray:
         """Access a burst of line addresses; returns per-line outcome codes.
 
@@ -208,6 +225,9 @@ class SharedLLC:
                            scalar or per-line bool array.
         ``force_bypass``   whole-tensor bypass (TMU ``bypass_all``), e.g.
                            Q/O tensors in FlashAttention; scalar or array.
+        ``cores``          optional int64 array (issuing core per line),
+                           only consulted for event-trace attribution
+                           when a sink is attached.
 
         Duplicate line addresses within one burst model MSHR behavior:
         the second occurrence of an *allocated* line hits (MSHR/LLC hit —
@@ -225,7 +245,7 @@ class SharedLLC:
         if np.unique(sets).shape[0] == n:
             out[:] = self._access_unique(line_addrs, sets, seen_before,
                                          is_write, bypass_eligible,
-                                         force_bypass)
+                                         force_bypass, cores=cores)
             return out
         # split into chunks with unique sets so state updates don't collide
         order = np.argsort(sets, kind="stable")
@@ -244,7 +264,8 @@ class SharedLLC:
             out[sel] = self._access_unique(
                 line_addrs[sel], sets[sel],
                 _index(seen_before, sel), _index(is_write, sel),
-                _index(bypass_eligible, sel), _index(force_bypass, sel))
+                _index(bypass_eligible, sel), _index(force_bypass, sel),
+                cores=None if cores is None else cores[sel])
         return out
 
     # ------------------------------------------------------------------
@@ -256,6 +277,7 @@ class SharedLLC:
         is_write=False,
         bypass_eligible=True,
         force_bypass=False,
+        cores=None,
     ) -> np.ndarray:
         """:meth:`access_burst` with the set mapping and pass split taken
         from a precomputed :class:`AccessPlan` (same outcome codes and
@@ -270,21 +292,23 @@ class SharedLLC:
             out[:] = self._access_unique(plan.line_addrs, plan.sets,
                                          seen_before, is_write,
                                          bypass_eligible, force_bypass,
-                                         tags=tags)
+                                         tags=tags, cores=cores)
             return out
         for sel in plan.passes:
             out[sel] = self._access_unique(
                 plan.line_addrs[sel], plan.sets[sel],
                 _index(seen_before, sel), _index(is_write, sel),
                 _index(bypass_eligible, sel), _index(force_bypass, sel),
-                tags=None if tags is None else tags[sel])
+                tags=None if tags is None else tags[sel],
+                cores=None if cores is None else cores[sel])
         return out
 
     # ------------------------------------------------------------------
     def _access_unique(self, line_addrs, sets, seen_before, is_write,
                        bypass_eligible, force_bypass,
-                       tags=None) -> np.ndarray:
+                       tags=None, cores=None) -> np.ndarray:
         n = line_addrs.shape[0]
+        sink = self.sink
         if tags is None:
             tags = self.geom.tag_of(line_addrs)
         out = np.empty(n, dtype=np.int64)
@@ -316,6 +340,10 @@ class SharedLLC:
             if self.controller is not None:
                 self._record_controller(hs, np.zeros(n_hit, dtype=bool),
                                         tags[hit])
+            if sink is not None:
+                sink.emit_lines(EV_HIT, line_addrs[hit], sets=hs, ways=hw,
+                                cores=None if cores is None
+                                else cores[hit])
             if n_hit == n:
                 return out
 
@@ -341,12 +369,24 @@ class SharedLLC:
         self.stats["cold_misses"] += (n - n_hit) - n_conf
         self.stats["conflict_misses"] += n_conf
 
+        if sink is not None:
+            m_addrs = line_addrs[miss]
+            m_cores = None if cores is None else cores[miss]
+            bp = np.nonzero(bypass)[0]
+            if bp.shape[0]:
+                sink.emit_lines(EV_BYPASS, m_addrs[bp], sets=m_sets[bp],
+                                cores=None if m_cores is None
+                                else m_cores[bp],
+                                aux=m_seen[bp].astype(np.int64))
+
         # --- allocation (alloc-on-fill; write-allocate) -----------------------
         alloc = ~bypass
         if alloc.any():
             a_sets = m_sets[alloc]
             a_tags = m_tags[alloc]
             way, evicted_valid, evicted_dead = self._select_victims(a_sets)
+            # victim tags must be read before the fill overwrites them
+            v_tags = self.tags[a_sets, way] if sink is not None else None
             # writeback accounting for dirty victims
             wb = self.dirty[a_sets, way] & evicted_valid
             self.stats["writebacks"] += int(wb.sum())
@@ -365,6 +405,23 @@ class SharedLLC:
             self.prio[a_sets, way] = self._priorities(a_tags)
             ev_full = np.zeros(m_sets.shape[0], dtype=bool)
             ev_full[alloc] = evicted_valid
+            if sink is not None:
+                geom = self.geom
+                ev = np.nonzero(evicted_valid)[0]
+                if ev.shape[0]:
+                    sink.emit_lines(
+                        EV_EVICT, geom.line_addr_of(a_sets[ev], v_tags[ev]),
+                        sets=a_sets[ev], ways=way[ev],
+                        aux=2 * v_tags[ev] + evicted_dead[ev])
+                wbi = np.nonzero(wb)[0]
+                if wbi.shape[0]:
+                    sink.emit_lines(
+                        EV_WB, geom.line_addr_of(a_sets[wbi], v_tags[wbi]),
+                        sets=a_sets[wbi], ways=way[wbi], aux=v_tags[wbi])
+                sink.emit_lines(
+                    EV_FILL, m_addrs[alloc], sets=a_sets, ways=way,
+                    cores=None if m_cores is None else m_cores[alloc],
+                    aux=2 * a_tags + m_seen[alloc])
         else:
             ev_full = np.zeros(m_sets.shape[0], dtype=bool)
 

@@ -139,6 +139,9 @@ class GearController:
         self.max_gear = 1 << cfg.b_bits
         # last observed eviction rate (for gqa_bypass contention)
         self.last_rate = np.zeros(shape, dtype=np.float64)
+        # opt-in event telemetry (repro.core.events.EventSink): gear
+        # transitions are emitted per (tenant, slice) when attached
+        self.sink = None
 
     def _flat(self, slice_ids: np.ndarray,
               tenant_ids: Optional[np.ndarray]) -> np.ndarray:
@@ -176,8 +179,18 @@ class GearController:
             self._low_streak = np.where(low, self._low_streak + 1, 0)
             down = self._low_streak >= self.cfg.down_streak
             self._low_streak[down] = 0
+            old = self.gear if self.sink is not None else None
             self.gear = np.clip(self.gear + up.astype(np.int64)
                                 - down.astype(np.int64), 0, self.max_gear)
+            if self.sink is not None:
+                changed = np.nonzero(old != self.gear)
+                if changed[0].shape[0]:
+                    if self.gear.ndim == 1:
+                        sl = changed[0]
+                        ten = np.zeros_like(sl)
+                    else:
+                        ten, sl = changed
+                    self.sink.emit_gear(sl, ten, self.gear[changed])
         self._evictions[:] = 0
         self._accesses[:] = 0
         # advance in whole window multiples: snapping to now_cycles would

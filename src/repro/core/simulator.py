@@ -39,6 +39,7 @@ import numpy as np
 
 from . import cache as C
 from .cache import CacheGeometry, SharedLLC
+from .events import EV_MSHR, EventSink
 from .policies import PolicyConfig, named_policy
 from .tmu import TMU, TMUParams, TensorMeta
 from .traces import Trace
@@ -65,6 +66,12 @@ class SimConfig:
     tmu_tensor_entries: int = 4096    # functional-model capacity; the RTL
     tmu_tile_entries: int = 4096      # uses 8/256 with time-multiplexed
     dead_fifo_depth: int = 16         # registration per operator
+    # opt-in structured event telemetry (repro.core.events): every run
+    # collects the canonical per-round event stream into a fresh
+    # EventSink attached to SimResult.events.  Off by default — the
+    # emission sites are fully skipped (sweep_perf.py gates the
+    # overhead-when-off at ~0%).
+    trace_events: bool = False
 
     @property
     def dram_lines_per_cycle(self) -> float:
@@ -93,6 +100,16 @@ class SimResult:
     #: matching global field (conservation pinned by tests).  Empty on
     #: single-tenant traces.
     tenants: Dict[str, Dict[str, int]] = field(default_factory=dict)
+    #: per-round metric series (recorded with ``record_history``):
+    #: ``round`` (global index of each non-empty round) plus aligned
+    #: ``hits``/``misses``/``bypassed``/``writebacks`` int64 series and,
+    #: on multi-tenant traces, ``tenant_*`` (rounds, tenants) matrices.
+    #: ``repro.core.events.timeline_digest`` hashes it deterministically
+    #: (suite_bench records the digest per scenario).
+    timeline: Dict[str, np.ndarray] = field(default_factory=dict)
+    #: the run's EventSink when event tracing was on (SimConfig.
+    #: trace_events or an explicit ``events=`` argument); None otherwise
+    events: Optional[EventSink] = None
 
     @property
     def accesses(self) -> int:
@@ -133,10 +150,11 @@ class _RoundLedger:
     """
 
     def __init__(self, sim: "Simulator", llc: SharedLLC, trace: Trace,
-                 record_history: bool):
+                 record_history: bool, sink: Optional[EventSink] = None):
         self.cfg = sim.cfg
         self.llc = llc
         self.record_history = record_history
+        self.sink = sink
         self.clock = 0.0
         self.mshr_hits = 0
         self.dram_lines = 0
@@ -146,6 +164,12 @@ class _RoundLedger:
         self.hist_acc: List[int] = []
         self.hist_gear: List[float] = []
         self.hist_tgear: List[np.ndarray] = []
+        # timeline series (one entry per non-empty round)
+        self.tl_round: List[int] = []
+        self.tl_miss: List[int] = []
+        self.tl_byp: List[int] = []
+        self.tl_wb: List[int] = []
+        self.tl_t_rows: List[np.ndarray] = []   # (tenants, 4) per round
         self.tenant_names = trace.tenant_names
         regions = trace.tenant_region_starts()
         if regions is not None:
@@ -159,16 +183,33 @@ class _RoundLedger:
         else:
             self._t_starts = None
         self._wb_before = 0
+        self._t_wb_before: Optional[np.ndarray] = None
+        # the ledger owns the global round index: it persists across
+        # streaming segments, so event rounds stay monotone and segment
+        # concatenation is bit-identical to a monolithic run
+        self._r = -1
 
     # -- engine hooks ---------------------------------------------------
     def idle_round(self) -> None:
+        self._r += 1
         self.clock += self.cfg.round_overhead_cycles
 
     def begin_round(self) -> None:
+        self._r += 1
+        if self.sink is not None:
+            self.sink.begin_round(self._r)
         self._wb_before = self.llc.stats["writebacks"]
+        if (self.record_history and self._t_starts is not None
+                and self.llc.tenant_wb is not None):
+            self._t_wb_before = self.llc.tenant_wb.copy()
 
     def end_round(self, codes: np.ndarray, addrs: np.ndarray,
                   dup_counts: np.ndarray, flops_round: float) -> None:
+        if self.sink is not None:
+            d = np.nonzero(dup_counts > 0)[0]
+            if d.shape[0]:
+                self.sink.emit_lines(EV_MSHR, addrs[d],
+                                     aux=dup_counts[d].astype(np.int64))
         n_dups = int(dup_counts.sum())
         self.mshr_hits += n_dups
         n_hit = int((codes == C.HIT).sum()) + n_dups
@@ -185,19 +226,30 @@ class _RoundLedger:
                 np.searchsorted(self._t_starts, addrs, side="right") - 1,
                 0)]
             n_t = self.t_hits.shape[0]
-            self.t_hits += np.bincount(tens[codes == C.HIT],
-                                       minlength=n_t)
-            self.t_mshr += np.bincount(tens, weights=dup_counts,
-                                       minlength=n_t).astype(np.int64)
-            self.t_cold += np.bincount(
+            inc_hits = np.bincount(tens[codes == C.HIT], minlength=n_t)
+            inc_mshr = np.bincount(tens, weights=dup_counts,
+                                   minlength=n_t).astype(np.int64)
+            inc_cold = np.bincount(
                 tens[(codes == C.COLD_MISS)
                      | (codes == C.BYPASSED_COLD)], minlength=n_t)
-            self.t_cf += np.bincount(
+            inc_cf = np.bincount(
                 tens[(codes == C.CONFLICT_MISS)
                      | (codes == C.BYPASSED_CONFLICT)], minlength=n_t)
-            self.t_byp += np.bincount(
+            inc_byp = np.bincount(
                 tens[(codes == C.BYPASSED_COLD)
                      | (codes == C.BYPASSED_CONFLICT)], minlength=n_t)
+            self.t_hits += inc_hits
+            self.t_mshr += inc_mshr
+            self.t_cold += inc_cold
+            self.t_cf += inc_cf
+            self.t_byp += inc_byp
+            if self.record_history:
+                t_wb = (self.llc.tenant_wb - self._t_wb_before
+                        if self._t_wb_before is not None
+                        else np.zeros(n_t, dtype=np.int64))
+                self.tl_t_rows.append(np.stack(
+                    [inc_hits + inc_mshr, inc_cold + inc_cf, inc_byp,
+                     t_wb]))
 
         self.clock += self._round_time(n_hit, cold, cf, cold,
                                        cf + wb_round, flops_round)
@@ -207,6 +259,10 @@ class _RoundLedger:
             self.hist_cycles.append(self.clock)
             self.hist_hits.append(n_hit)
             self.hist_acc.append(n_hit + cold + cf)
+            self.tl_round.append(self._r)
+            self.tl_miss.append(cold + cf)
+            self.tl_byp.append(int((codes >= C.BYPASSED_COLD).sum()))
+            self.tl_wb.append(wb_round)
             ctl = self.llc.controller
             if ctl is not None:
                 self.hist_gear.append(float(ctl.gear.mean()))
@@ -229,6 +285,26 @@ class _RoundLedger:
             if self.hist_tgear:
                 # (rounds, tenants) mean gear per tenant's feedback loop
                 history["tenant_gear"] = np.asarray(self.hist_tgear)
+
+        timeline: Dict[str, np.ndarray] = {}
+        if self.record_history:
+            timeline = {
+                "round": np.asarray(self.tl_round, dtype=np.int64),
+                "hits": np.asarray(self.hist_hits, dtype=np.int64),
+                "misses": np.asarray(self.tl_miss, dtype=np.int64),
+                "bypassed": np.asarray(self.tl_byp, dtype=np.int64),
+                "writebacks": np.asarray(self.tl_wb, dtype=np.int64),
+            }
+            if self.hist_gear:
+                timeline["gear"] = np.asarray(self.hist_gear)
+            if self.tl_t_rows:
+                # (rounds, tenants) series, split out of the per-round
+                # (tenants, 4) stacks
+                t = np.asarray(self.tl_t_rows, dtype=np.int64)
+                timeline["tenant_hits"] = t[:, 0]
+                timeline["tenant_misses"] = t[:, 1]
+                timeline["tenant_bypassed"] = t[:, 2]
+                timeline["tenant_writebacks"] = t[:, 3]
 
         tenants: Dict[str, Dict[str, int]] = {}
         if self._t_starts is not None:
@@ -254,7 +330,7 @@ class _RoundLedger:
             writebacks=llc.stats["writebacks"],
             dead_evictions=llc.stats["dead_evictions"],
             flops=self.flops, freq_ghz=freq_ghz, history=history,
-            tenants=tenants,
+            tenants=tenants, timeline=timeline, events=self.sink,
         )
 
     # ------------------------------------------------------------------
@@ -283,8 +359,9 @@ class Simulator:
         self.tmu_params = tmu_params or TMUParams(b_bits=policy.b_bits)
 
     # ------------------------------------------------------------------
-    def _fresh_state(self, trace: Trace) -> Tuple[CacheGeometry, TMU,
-                                                  SharedLLC]:
+    def _fresh_state(self, trace: Trace,
+                     sink: Optional[EventSink] = None
+                     ) -> Tuple[CacheGeometry, TMU, SharedLLC]:
         cfg = self.cfg
         geom = CacheGeometry(cfg.llc_bytes, cfg.line_bytes, cfg.llc_assoc,
                              cfg.llc_slices)
@@ -296,11 +373,24 @@ class Simulator:
         tmu.register_many(trace.tensors.values())
         llc = SharedLLC(geom, self.policy, tmu=tmu,
                         tenant_map=trace.tenant_region_starts())
+        if sink is not None:
+            sink.bind(trace, geom)
+            llc.sink = sink
+            tmu.sink = sink
+            if llc.controller is not None:
+                llc.controller.sink = sink
         return geom, tmu, llc
+
+    def _resolve_sink(self,
+                      events: Optional[EventSink]) -> Optional[EventSink]:
+        if events is not None:
+            return events
+        return EventSink() if self.cfg.trace_events else None
 
     def run(self, trace: Trace, record_history: bool = True,
             *, engine: str = "compiled",
-            chunk_lines: Optional[int] = None) -> SimResult:
+            chunk_lines: Optional[int] = None,
+            events: Optional[EventSink] = None) -> SimResult:
         """Simulate ``trace`` under this simulator's policy.
 
         ``engine="compiled"`` (default) drives the cached
@@ -310,6 +400,10 @@ class Simulator:
         the trace is lowered in whole-round CSR segments of at most that
         many pre-merge line requests, fed incrementally to the same
         round loop — bit-identical counters, bounded lowering memory.
+        ``events`` attaches an :class:`~repro.core.events.EventSink`
+        (one per run) that collects the canonical event stream;
+        ``SimConfig.trace_events=True`` creates one implicitly.  The
+        sink comes back on ``SimResult.events``.
         """
         if self.cfg.line_bytes != trace.line_bytes:
             # traces bake line granularity into their addresses; a
@@ -319,38 +413,46 @@ class Simulator:
                 f"SimConfig.line_bytes={self.cfg.line_bytes} does not "
                 f"match trace line_bytes={trace.line_bytes}")
         if engine == "compiled":
-            return self._run_compiled(trace, record_history, chunk_lines)
+            return self._run_compiled(trace, record_history, chunk_lines,
+                                      events)
         if engine == "steps":
             if chunk_lines is not None:
                 raise ValueError("chunk_lines requires engine='compiled'")
-            return self._run_steps(trace, record_history)
+            return self._run_steps(trace, record_history, events)
         raise ValueError(f"unknown engine {engine!r}")
 
     # ------------------------------------------------------------------
     # compiled engine: slice flat per-round arrays
     # ------------------------------------------------------------------
     def _run_compiled(self, trace: Trace, record_history: bool,
-                      chunk_lines: Optional[int] = None) -> SimResult:
+                      chunk_lines: Optional[int] = None,
+                      events: Optional[EventSink] = None) -> SimResult:
         if chunk_lines is None:
             segments = (trace.compiled(self.cfg.line_bytes),)
         else:
             segments = trace.compiled_segments(self.cfg.line_bytes,
                                                chunk_lines)
-        return self.run_segments(trace, segments, record_history)
+        return self.run_segments(trace, segments, record_history,
+                                 events=events)
 
     def run_segments(self, trace: Trace, segments,
-                     record_history: bool = True) -> SimResult:
+                     record_history: bool = True, *,
+                     events: Optional[EventSink] = None) -> SimResult:
         """Streaming entry point: consume :class:`CompiledTrace`
         segments incrementally against one persistent cache/TMU/ledger
         state.  Cache state, the global seen bitmap, and the gear
         controller all persist across segment boundaries, so the result
         is bit-identical to a monolithic run — this is the hook the
         serving-replay path (``repro.serve``) uses to drive traces too
-        large to materialize up front."""
+        large to materialize up front.  An attached event sink persists
+        the same way: the round index lives in the ledger, so segment-
+        by-segment emission concatenates bit-identically to the
+        monolithic event stream."""
         cfg = self.cfg
-        geom, tmu, llc = self._fresh_state(trace)
+        sink = self._resolve_sink(events)
+        geom, tmu, llc = self._fresh_state(trace, sink)
         gqa = self.policy.gqa_variant
-        led = _RoundLedger(self, llc, trace, record_history)
+        led = _RoundLedger(self, llc, trace, record_history, sink)
         seen = None
         for ct in segments:
             if seen is None:
@@ -365,6 +467,7 @@ class Simulator:
         tll_tags = ct.tll_tags_for(geom)   # per-geometry, sweep-shared
         round_off = ct.round_off
         tll_off = ct.tll_off
+        sink = led.sink
         for r in range(ct.n_rounds):
             a0, a1 = round_off[r], round_off[r + 1]
             if a0 == a1:
@@ -386,7 +489,9 @@ class Simulator:
                                        seen_before=seen_b,
                                        is_write=ct.u_write[sel],
                                        bypass_eligible=elig,
-                                       force_bypass=ct.u_force[sel])
+                                       force_bypass=ct.u_force[sel],
+                                       cores=ct.u_core[sel]
+                                       if sink is not None else None)
             t0, t1 = tll_off[r], tll_off[r + 1]
             if t1 > t0:
                 tmu.on_access_batch(ct.tll_tids[t0:t1], ct.tll_tiles[t0:t1],
@@ -397,9 +502,11 @@ class Simulator:
     # ------------------------------------------------------------------
     # step engine: reference implementation over Python Step lists
     # ------------------------------------------------------------------
-    def _run_steps(self, trace: Trace, record_history: bool) -> SimResult:
+    def _run_steps(self, trace: Trace, record_history: bool,
+                   events: Optional[EventSink] = None) -> SimResult:
         cfg = self.cfg
-        geom, tmu, llc = self._fresh_state(trace)
+        sink = self._resolve_sink(events)
+        geom, tmu, llc = self._fresh_state(trace, sink)
 
         # per-tensor "ever fetched" bitmaps for cold/conflict classification
         seen: Dict[int, np.ndarray] = {
@@ -408,7 +515,7 @@ class Simulator:
         }
 
         n_rounds = trace.n_rounds
-        led = _RoundLedger(self, llc, trace, record_history)
+        led = _RoundLedger(self, llc, trace, record_history, sink)
 
         tensors = trace.tensors
         line_b = cfg.line_bytes
@@ -419,6 +526,7 @@ class Simulator:
             force_parts: List[np.ndarray] = []
             elig_parts: List[np.ndarray] = []
             write_parts: List[np.ndarray] = []
+            core_parts: List[np.ndarray] = []      # only when tracing
             tll_calls: List[Tuple[int, int]] = []  # (tll_addr, tag)
             flops_round = 0.0
 
@@ -451,6 +559,8 @@ class Simulator:
                         np.full(k, meta.bypass_all, dtype=bool))
                     elig_parts.append(np.full(k, eligible, dtype=bool))
                     write_parts.append(np.full(k, is_store, dtype=bool))
+                    if sink is not None:
+                        core_parts.append(np.full(k, c, dtype=np.int64))
                     if not is_store and not meta.bypass_all:
                         tll_addr = meta.tile_last_line(tile, line_b)
                         tll_calls.append(
@@ -480,11 +590,16 @@ class Simulator:
                                   minlength=first_idx.shape[0]) > 0
 
             led.begin_round()
-            codes = llc.access_burst(addrs[first_idx],
-                                     seen_before=seen_b[first_idx],
-                                     is_write=write_m,
-                                     bypass_eligible=elig_b[first_idx],
-                                     force_bypass=force_b[first_idx])
+            codes = llc.access_burst(
+                addrs[first_idx],
+                seen_before=seen_b[first_idx],
+                is_write=write_m,
+                bypass_eligible=elig_b[first_idx],
+                force_bypass=force_b[first_idx],
+                # first merged occurrence keeps its requester, matching
+                # the compiled lowering's u_core
+                cores=np.concatenate(core_parts)[first_idx]
+                if sink is not None else None)
 
             for tll_addr, tag in tll_calls:
                 tmu.on_access(tll_addr, tag)

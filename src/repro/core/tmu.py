@@ -181,6 +181,9 @@ class TMU:
             "live_overflow_evictions": 0,
             "dead_fifo_drops": 0,
         }
+        # opt-in event telemetry (repro.core.events.EventSink); None on
+        # the hot path unless the simulator attached a sink
+        self.sink = None
 
     # ------------------------------------------------------------------
     # The three specialized instructions (paper §IV-B)
@@ -245,6 +248,8 @@ class TMU:
             if self.dead_fifo.push(self.params.dead_id(tag)) is not None:
                 self.stats["dead_fifo_drops"] += 1
             self.stats["tiles_retired"] += 1
+            if self.sink is not None:
+                self.sink.emit_retire([meta.tensor_id], [tile_idx])
         else:
             self._live[key] = cnt
             self._live.move_to_end(key)
@@ -274,6 +279,9 @@ class TMU:
                     & ((1 << width) - 1)).tolist()
         live = self._live
         fifo = self.dead_fifo
+        sink = self.sink
+        r_tids = [] if sink is not None else None
+        r_tiles = [] if sink is not None else None
         retired = drops = overflow = 0
         for tid, tile, did, n_acc in zip(
                 tensor_ids.tolist(), np.asarray(tile_idxs).tolist(),
@@ -285,6 +293,9 @@ class TMU:
                 if fifo.push(did) is not None:
                     drops += 1
                 retired += 1
+                if r_tids is not None:
+                    r_tids.append(tid)
+                    r_tiles.append(tile)
             else:
                 live[key] = cnt
                 live.move_to_end(key)
@@ -294,6 +305,8 @@ class TMU:
         self.stats["tiles_retired"] += retired
         self.stats["dead_fifo_drops"] += drops
         self.stats["live_overflow_evictions"] += overflow
+        if sink is not None and r_tids:
+            sink.emit_retire(r_tids, r_tiles)
 
     def is_dead(self, tag: int) -> bool:
         return self.params.dead_id(tag) in self.dead_fifo

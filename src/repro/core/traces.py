@@ -228,6 +228,9 @@ class CompiledTrace:
     * ``u_write``      OR of the write intents of all merged duplicates
     * ``u_force``      tensor-level ``bypass_all``
     * ``u_nonleader``  issuing core (first occurrence) is a gqa non-leader
+    * ``u_core``       issuing core of the first occurrence (event-trace
+                       attribution; the MSHR merge keeps the first
+                       requester, matching the step engine's unique())
     * ``u_dups``       duplicates merged away into this line (MSHR-hit
                        accounting, attributable per tenant)
 
@@ -242,8 +245,8 @@ class CompiledTrace:
     """
 
     def __init__(self, line_bytes: int, n_rounds: int, n_seen_lines: int,
-                 u_addrs, u_dense, u_write, u_force, u_nonleader, u_dups,
-                 round_off, n_acc_round, flops_round,
+                 u_addrs, u_dense, u_write, u_force, u_nonleader, u_core,
+                 u_dups, round_off, n_acc_round, flops_round,
                  tll_addrs, tll_tids, tll_tiles, tll_nacc, tll_off):
         self.line_bytes = line_bytes
         self.n_rounds = n_rounds
@@ -253,6 +256,7 @@ class CompiledTrace:
         self.u_write = u_write
         self.u_force = u_force
         self.u_nonleader = u_nonleader
+        self.u_core = u_core          # first requester (event attribution)
         self.u_dups = u_dups          # merged-away duplicates per line
         self.round_off = round_off
         self.n_acc_round = n_acc_round
@@ -305,6 +309,7 @@ class CompiledTrace:
         p_write: List[bool] = []
         p_force: List[bool] = []
         p_nonlead: List[bool] = []
+        p_core: List[int] = []
         t_round: List[int] = []      # TLL feed, in issue order
         t_addr: List[int] = []
         t_tid: List[int] = []
@@ -333,6 +338,7 @@ class CompiledTrace:
                     p_write.append(is_store)
                     p_force.append(meta.bypass_all)
                     p_nonlead.append(nonleader[c])
+                    p_core.append(c)
                     if not is_store and not meta.bypass_all:
                         t_round.append(rloc)
                         t_addr.append(meta.tile_last_line(tile, line_bytes))
@@ -354,6 +360,7 @@ class CompiledTrace:
             a_write = np.asarray(p_write, dtype=bool)[rep]
             a_force = np.asarray(p_force, dtype=bool)[rep]
             a_nonlead = np.asarray(p_nonlead, dtype=bool)[rep]
+            a_core = np.asarray(p_core, dtype=np.int64)[rep]
 
             # per-round MSHR merge: stable sort by (round, addr); the first
             # element of each (round, addr) run is the first occurrence in
@@ -371,6 +378,7 @@ class CompiledTrace:
             u_dense = a_dense[order][start_idx]
             u_force = a_force[order][start_idx]
             u_nonleader = a_nonlead[order][start_idx]
+            u_core = a_core[order][start_idx]
             u_write = np.maximum.reduceat(
                 a_write[order].astype(np.int8), start_idx).astype(bool)
             u_dups = np.diff(np.append(start_idx, n_acc_total)) - 1
@@ -380,6 +388,7 @@ class CompiledTrace:
         else:
             u_addrs = u_dense = np.empty(0, dtype=np.int64)
             u_write = u_force = u_nonleader = np.empty(0, dtype=bool)
+            u_core = np.empty(0, dtype=np.int64)
             u_dups = np.empty(0, dtype=np.int64)
             round_off = np.zeros(n_rounds + 1, dtype=np.int64)
             n_acc_round = np.zeros(n_rounds, dtype=np.int64)
@@ -390,7 +399,8 @@ class CompiledTrace:
         )).astype(np.int64)
         return cls(
             line_bytes, n_rounds, n_seen,
-            u_addrs, u_dense, u_write, u_force, u_nonleader, u_dups,
+            u_addrs, u_dense, u_write, u_force, u_nonleader, u_core,
+            u_dups,
             round_off.astype(np.int64), n_acc_round.astype(np.int64),
             flops_round,
             np.asarray(t_addr, dtype=np.int64),
@@ -416,7 +426,7 @@ class CompiledTrace:
             self.line_bytes, round_stop - round_start, self.n_seen_lines,
             self.u_addrs[a0:a1], self.u_dense[a0:a1], self.u_write[a0:a1],
             self.u_force[a0:a1], self.u_nonleader[a0:a1],
-            self.u_dups[a0:a1],
+            self.u_core[a0:a1], self.u_dups[a0:a1],
             self.round_off[round_start:round_stop + 1] - a0,
             self.n_acc_round[round_start:round_stop],
             self.flops_round[round_start:round_stop],

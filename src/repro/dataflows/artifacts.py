@@ -44,7 +44,7 @@ from typing import Dict, Optional
 
 import numpy as np
 
-_FORMAT_VERSION = "1"
+_FORMAT_VERSION = "2"     # 2: compiled traces grew the u_core column
 
 #: lowering sources whose bytes salt the on-disk key: an edit to any of
 #: them must invalidate cached artifacts (the fingerprint itself stays a
@@ -219,7 +219,7 @@ def _json_unblob(arr: np.ndarray):
 # typed artifact adapters
 # ---------------------------------------------------------------------------
 _CT_ARRAYS = ("u_addrs", "u_dense", "u_write", "u_force", "u_nonleader",
-              "u_dups", "round_off", "n_acc_round", "flops_round",
+              "u_core", "u_dups", "round_off", "n_acc_round", "flops_round",
               "tll_addrs", "tll_tids", "tll_tiles", "tll_nacc", "tll_off")
 
 

@@ -1,0 +1,165 @@
+"""Differential conformance harness (repro.conformance, DESIGN.md §10).
+
+Covers the first-divergence report (an injected divergence must come
+back with round + event context, not a bare assert), golden digest
+round-tripping and schema invalidation, matrix growth from the suite
+registry, and one end-to-end cell through scripts/conformance.py.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.conformance import (CONFORMANCE_POLICIES, SMOKE_SCENARIOS,
+                               compare_scenario, first_divergence,
+                               load_golden, matrix_entries, save_golden)
+from repro.core import EventSink, SimConfig, Simulator, named_policy
+from repro.core.events import SCHEMA_VERSION, decode_event
+from repro.core.traces import build_matmul_trace
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _tiny_stream():
+    trace = build_matmul_trace(256, 256, 256, n_cores=4)
+    sink = EventSink()
+    sim = Simulator(SimConfig(llc_bytes=128 * 1024, llc_slices=8),
+                    named_policy("at+dbp"))
+    sim.run(trace, record_history=False, events=sink)
+    return sink.canonical()
+
+
+# ---------------------------------------------------------------------------
+# first-divergence reporting
+# ---------------------------------------------------------------------------
+def test_identical_streams_have_no_divergence():
+    m = _tiny_stream()
+    assert first_divergence(m, m) is None
+    assert first_divergence(m.copy(), m.copy()) is None
+
+
+def test_injected_divergence_reports_round_and_context():
+    expected = _tiny_stream()
+    actual = expected.copy()
+    idx = expected.shape[0] // 2
+    actual[idx, 7] += 1                     # flip one event's aux
+    div = first_divergence(expected, actual, window=2)
+    assert div is not None
+    assert div.index == idx
+    assert div.round == int(expected[idx, 0])
+    assert div.expected == [int(x) for x in expected[idx]]
+    assert div.actual == [int(x) for x in actual[idx]]
+    text = div.render()
+    # a real report, not a bare assert: names the round, shows both
+    # events decoded, and carries surrounding context lines
+    assert "first divergence" in text
+    assert f"round {div.round}" in text
+    assert div.expected_text in text and div.actual_text in text
+    assert len(div.context) == 5            # idx±2
+    assert sum(c.startswith(">>") for c in div.context) == 1
+    # round-trips to JSON for the CI artifact
+    blob = json.dumps(div.to_dict())
+    assert str(div.round) in blob
+
+
+def test_divergence_on_truncated_stream():
+    expected = _tiny_stream()
+    actual = expected[:-3]
+    div = first_divergence(expected, actual)
+    assert div is not None
+    assert div.index == expected.shape[0] - 3
+    assert div.actual is None
+    assert "<stream ended>" in div.actual_text
+
+
+def test_divergence_window_clamps_at_edges():
+    expected = _tiny_stream()[:4]
+    actual = expected.copy()
+    actual[0, 7] += 1
+    div = first_divergence(expected, actual, window=3)
+    assert div.index == 0
+    assert len(div.context) == 4            # 0..3, clamped at the start
+
+
+# ---------------------------------------------------------------------------
+# golden digests
+# ---------------------------------------------------------------------------
+def test_golden_roundtrip(tmp_path):
+    path = tmp_path / "golden.json"
+    digests = {"b/x": "2" * 64, "a/y": "1" * 64}
+    save_golden(digests, path)
+    blob = json.loads(path.read_text())
+    assert blob["schema_version"] == SCHEMA_VERSION
+    assert list(blob["digests"]) == ["a/y", "b/x"]     # key-sorted
+    assert load_golden(path) == digests
+
+
+def test_golden_rejects_stale_schema(tmp_path):
+    path = tmp_path / "golden.json"
+    path.write_text(json.dumps({"schema_version": SCHEMA_VERSION + 1,
+                                "digests": {"a/b": "0" * 64}}))
+    assert load_golden(path) is None
+    assert load_golden(tmp_path / "missing.json") is None
+
+
+def test_frozen_goldens_cover_the_full_matrix():
+    golden = load_golden()
+    assert golden is not None, "tests/golden/conformance_digests.json " \
+        "missing or stale — run scripts/conformance.py --update-golden"
+    cells = {f"{k}/{p}" for k, p in matrix_entries()}
+    assert cells <= set(golden)
+
+
+# ---------------------------------------------------------------------------
+# matrix growth
+# ---------------------------------------------------------------------------
+def test_matrix_grows_with_suite_registry():
+    from repro.dataflows.suite import registry_keys
+    entries = list(matrix_entries())
+    keys = registry_keys()
+    assert {k for k, _ in entries} == set(keys)
+    assert len(entries) == len(keys) * len(CONFORMANCE_POLICIES)
+    assert set(SMOKE_SCENARIOS) <= set(keys)
+    smoke = list(matrix_entries(smoke=True))
+    assert {k for k, _ in smoke} == set(SMOKE_SCENARIOS)
+    # explicit axes override both defaults
+    assert list(matrix_entries(scenarios=["matmul"],
+                               policies=["lru"])) == [("matmul", "lru")]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end cells
+# ---------------------------------------------------------------------------
+def test_compare_scenario_cell_passes_against_frozen_golden():
+    golden = load_golden()
+    res, = compare_scenario("matmul", ("lru",), golden=golden)
+    assert res.ok and res.failure is None
+    assert res.n_events > 0 and len(res.digest) == 64
+    if golden is not None:
+        assert res.golden == res.digest
+
+
+def test_compare_scenario_flags_corrupted_golden():
+    res, = compare_scenario("matmul", ("lru",),
+                            golden={"matmul/lru": "f" * 64})
+    assert res.failure == "golden"
+    res, = compare_scenario("matmul", ("lru",), golden={})
+    assert res.failure == "missing-golden"
+
+
+@pytest.mark.slow
+def test_conformance_script_single_cell(tmp_path):
+    report = tmp_path / "report.json"
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "conformance.py"),
+         "--scenario", "matmul", "--policy", "lru",
+         "--report", str(report)],
+        capture_output=True, text=True, cwd=REPO)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    blob = json.loads(report.read_text())
+    assert blob["failures"] == 0
+    assert blob["cells"][0]["scenario"] == "matmul"

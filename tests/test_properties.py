@@ -280,6 +280,45 @@ def test_composite_tenant_conservation(data):
 
 
 # ---------------------------------------------------------------------------
+# Event layer extension of the §8.4 attribution invariant: slicing the
+# event stream by its tenant column must recount every per-tenant
+# SimResult counter exactly (and hence the globals) — telemetry and
+# accounting attribute to the same owner.
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(data=st.data())
+def test_composite_event_stream_tenant_conservation(data):
+    from repro.core import EventSink, SimConfig, Simulator, named_policy
+    from repro.core.events import (EV_BYPASS, EV_FILL, EV_HIT, EV_MSHR,
+                                   EV_WB)
+
+    spec = _random_composite(data.draw)
+    pol = data.draw(st.sampled_from(["lru", "at+dbp", "all"]))
+    hw = SimConfig(n_cores=spec.n_cores, llc_bytes=256 * 1024,
+                   llc_slices=8)
+    sink = EventSink()
+    res = Simulator(hw, named_policy(pol)).run(
+        lower_to_trace(spec), record_history=False, events=sink)
+    m = sink.matrix()
+    kinds, ten, aux = m[:, 6], m[:, 2], m[:, 7]
+    for i, name in enumerate(spec.tenant_names):
+        t = res.tenants[name]
+        sel = ten == i
+        assert int((kinds[sel] == EV_HIT).sum()) == t["hits"], name
+        assert (int(aux[sel & (kinds == EV_MSHR)].sum())
+                == t["mshr_hits"]), name
+        assert int((kinds[sel] == EV_BYPASS).sum()) == t["bypassed"], name
+        assert int((kinds[sel] == EV_WB).sum()) == t["writebacks"], name
+        # every one of the tenant's misses either fills or bypasses
+        assert (int((kinds[sel] == EV_FILL).sum())
+                + int((kinds[sel] == EV_BYPASS).sum())
+                == t["cold_misses"] + t["conflict_misses"]), name
+    # the tenant slices partition the globals (no orphaned events)
+    assert int((kinds == EV_HIT).sum()) == res.hits
+    assert int((kinds == EV_WB).sum()) == res.writebacks
+
+
+# ---------------------------------------------------------------------------
 # TMU invariant: retirement count never exceeds TLL accesses / nAcc
 # ---------------------------------------------------------------------------
 @settings(max_examples=30, deadline=None)

@@ -1,0 +1,57 @@
+"""scripts/suite_gate.py budget plumbing: --sps-budget / REPRO_SPS_BUDGET
+replace the formerly hardcoded seconds-per-scenario limit."""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+GATE = REPO / "scripts" / "suite_gate.py"
+
+
+def _report(tmp_path, sps=3.0):
+    path = tmp_path / "suite_bench.json"
+    path.write_text(json.dumps({
+        "model_rel_err_by_scenario": {"profile": {"matmul": 0.05},
+                                      "closed": {"matmul": 0.05}},
+        "dbp_win_scenarios": [],
+        "rows": {},
+        "perf": {"seconds_per_scenario": sps, "case_seconds": {}},
+    }))
+    return path
+
+
+def _gate(report, *flags, env=None):
+    e = dict(os.environ)
+    e.pop("REPRO_SPS_BUDGET", None)
+    if env:
+        e.update(env)
+    return subprocess.run(
+        [sys.executable, str(GATE), str(report), *flags],
+        capture_output=True, text=True, cwd=REPO, env=e)
+
+
+def test_default_budget_passes(tmp_path):
+    proc = _gate(_report(tmp_path))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "suite gate OK" in proc.stdout
+
+
+def test_flag_tightens_budget(tmp_path):
+    proc = _gate(_report(tmp_path), "--sps-budget", "1.0")
+    assert proc.returncode != 0
+    assert "throughput regressed" in proc.stderr + proc.stdout
+
+
+def test_env_tightens_budget(tmp_path):
+    proc = _gate(_report(tmp_path), env={"REPRO_SPS_BUDGET": "1.0"})
+    assert proc.returncode != 0
+    assert "throughput regressed" in proc.stderr + proc.stdout
+
+
+def test_flag_overrides_env(tmp_path):
+    proc = _gate(_report(tmp_path), "--sps-budget", "10.0",
+                 env={"REPRO_SPS_BUDGET": "1.0"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
