@@ -16,7 +16,8 @@ import traceback
 
 from . import (common, fig3_hitrate, fig4_policies, fig5_bbits, fig6_bypass,
                fig7_gear, fig8_dbp, fig9_validation, fig10_longctx,
-               roofline_bench, suite_bench, sweep_perf, table2_tmu)
+               replay_bench, roofline_bench, suite_bench, sweep_perf,
+               table2_tmu)
 
 BENCHMARKS = {
     "table2_tmu": table2_tmu.run,
@@ -31,6 +32,7 @@ BENCHMARKS = {
     "roofline": roofline_bench.run,
     "sweep_perf": sweep_perf.run,
     "suite_bench": suite_bench.run,
+    "replay_bench": replay_bench.run,
 }
 
 
@@ -39,22 +41,27 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale grids (slow)")
     ap.add_argument("--only", default=None,
-                    help="run a single benchmark by name")
+                    help="run a subset of benchmarks by name "
+                         "(comma-separated)")
     ap.add_argument("--json", nargs="?", const="latest", default=None,
                     metavar="TAG",
                     help="also write the emitted rows to "
                          "reports/benchmarks/BENCH_<TAG>.json")
     args = ap.parse_args(argv)
 
-    if args.only is not None and args.only not in BENCHMARKS:
-        raise SystemExit(
-            f"unknown benchmark {args.only!r}; available: "
-            f"{', '.join(sorted(BENCHMARKS))}")
+    only = None
+    if args.only is not None:
+        only = [n.strip() for n in args.only.split(",") if n.strip()]
+        unknown = [n for n in only if n not in BENCHMARKS]
+        if unknown:
+            raise SystemExit(
+                f"unknown benchmark(s) {unknown}; available: "
+                f"{', '.join(sorted(BENCHMARKS))}")
 
     print("name,us_per_call,derived")
     failed = []
     for name, fn in BENCHMARKS.items():
-        if args.only and name != args.only:
+        if only is not None and name not in only:
             continue
         try:
             fn(full=args.full)

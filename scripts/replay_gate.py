@@ -1,0 +1,90 @@
+#!/usr/bin/env python
+"""CI gate over the most recent ``replay_bench`` report.
+
+Asserts, on whatever request count the report covers (the ≈5k-request
+CI smoke or a full 10⁵-request sweep), per swept policy:
+
+* the replay finished inside a wall budget (``--budget-seconds`` /
+  ``REPRO_REPLAY_BUDGET``) — streaming-throughput regressions fail CI
+  instead of silently inflating the smoke step;
+* peak memory stayed bounded by the chunk window: the streaming
+  engine's seen-bitmap high-water mark must stay under
+  ``--max-peak-fraction`` of the total dense lines declared over the
+  replay's lifetime (bitmap recycling is the mechanism that makes
+  10⁵–10⁶-request replays feasible; a leak shows up here long before
+  RSS does);
+* the window compiler actually chunked (≥ 2 segments — a replay that
+  silently fell back to one monolithic window is not testing the
+  streaming path);
+* every generated request completed (the continuous-batching loop
+  drained), and the TTFT/TPOT SLO percentiles are present and ordered.
+
+Run it immediately after a ``benchmarks.replay_bench`` invocation —
+the benchmark always writes ``reports/benchmarks/replay_bench.json``.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+#: default wall budget per policy for the CI smoke replay (measured
+#: ~5.5 s for 5k requests on one CI core; generous 6x headroom)
+DEFAULT_BUDGET_SECONDS = 30.0
+#: seen-bitmap high-water mark as a fraction of total lines declared
+#: (measured ~0.09 at 5k requests; the ratio shrinks as replays grow,
+#: so the ceiling only loosens relative to the measurement)
+DEFAULT_MAX_PEAK_FRACTION = 0.5
+
+ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+ap.add_argument("report", nargs="?",
+                default="reports/benchmarks/replay_bench.json",
+                help="replay_bench JSON report to gate")
+ap.add_argument("--budget-seconds", type=float,
+                default=float(os.environ.get(
+                    "REPRO_REPLAY_BUDGET", DEFAULT_BUDGET_SECONDS)),
+                help="wall budget per swept policy (default: "
+                     "$REPRO_REPLAY_BUDGET or %(default)s)")
+ap.add_argument("--max-peak-fraction", type=float,
+                default=DEFAULT_MAX_PEAK_FRACTION,
+                help="seen-bitmap peak / total declared lines ceiling "
+                     "(default %(default)s)")
+args = ap.parse_args()
+
+with open(args.report) as f:
+    report = json.load(f)
+
+n_requests = report["n_requests"]
+completed = report.get("completed")
+if completed != n_requests:
+    sys.exit(f"replay did not drain: {completed} of {n_requests} "
+             f"requests completed")
+
+for pol, row in report["rows"].items():
+    wall = float(row["wall_s"])
+    if wall > args.budget_seconds:
+        sys.exit(f"{pol}: replay wall time {wall:.2f} s exceeds the "
+                 f"{args.budget_seconds} s budget "
+                 f"({row['rounds_per_s']:.0f} rounds/s)")
+    peak = int(row["peak_seen_lines"])
+    total = int(row["total_lines_declared"])
+    frac = peak / max(total, 1)
+    if frac > args.max_peak_fraction:
+        sys.exit(f"{pol}: seen-bitmap peak {peak} lines is "
+                 f"{frac:.3f} of the {total} declared — exceeds the "
+                 f"{args.max_peak_fraction} bounded-window ceiling "
+                 f"(bitmap recycling leak?)")
+    if int(row["segments"]) < 2:
+        sys.exit(f"{pol}: replay compiled {row['segments']} segment(s) "
+                 f"— the streaming path did not chunk")
+    for metric in ("ttft_ms", "tpot_ms"):
+        pct = row["slo"].get(metric)
+        if not pct:
+            sys.exit(f"{pol}: SLO metric {metric} missing from report")
+        if not (0.0 < pct["p50"] <= pct["p95"] <= pct["p99"]):
+            sys.exit(f"{pol}: {metric} percentiles malformed: {pct}")
+
+polys = list(report["rows"])
+print(f"replay gate OK: {n_requests} requests drained over {polys}; "
+      f"all within {args.budget_seconds} s and "
+      f"peak-seen <= {args.max_peak_fraction} of declared")

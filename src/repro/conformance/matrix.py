@@ -25,9 +25,11 @@ from typing import Iterable, Iterator, Optional, Tuple
 #: lru, dbp, at+dbp) plus the gear-exercising composite
 CONFORMANCE_POLICIES: Tuple[str, ...] = ("lru", "dbp", "at+dbp", "all")
 
-#: CI smoke subset: small dense, paged-decode, and multi-tenant composed
-#: traces — the three structurally distinct event mixes
-SMOKE_SCENARIOS: Tuple[str, ...] = ("matmul", "decode-paged", "mt-spec-ssd")
+#: CI smoke subset: small dense, paged-decode, multi-tenant composed,
+#: and generator-driven replay traces — the structurally distinct event
+#: mixes (serve-replay adds mid-run tensor churn from the batching loop)
+SMOKE_SCENARIOS: Tuple[str, ...] = ("matmul", "decode-paged", "mt-spec-ssd",
+                                    "serve-replay")
 
 
 def matrix_entries(smoke: bool = False,

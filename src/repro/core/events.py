@@ -116,6 +116,27 @@ class EventSink:
             self._ten_starts = None
             self._tenant_by_tid = {}
 
+    def register_tensors(self, metas) -> None:
+        """Extend the address-resolution table with tensors that joined
+        the run mid-stream (the serving-replay path registers tensors at
+        request admission).  Replay addresses come from a monotone bump
+        allocator, so appending keeps the table sorted; a safety check
+        guards that invariant."""
+        new = sorted((m.base_addr, m.tensor_id) for m in metas)
+        if not new:
+            return
+        starts = np.asarray([s for s, _ in new], dtype=np.int64)
+        tids = np.asarray([t for _, t in new], dtype=np.int64)
+        if self._t_starts is None or self._t_starts.shape[0] == 0:
+            self._t_starts, self._t_ids = starts, tids
+            return
+        if starts[0] <= self._t_starts[-1]:
+            raise ValueError(
+                "register_tensors requires monotonically increasing "
+                "base addresses (bump allocation)")
+        self._t_starts = np.concatenate([self._t_starts, starts])
+        self._t_ids = np.concatenate([self._t_ids, tids])
+
     def begin_round(self, round_idx: int) -> None:
         self._round = round_idx
 

@@ -453,13 +453,61 @@ class Simulator:
         geom, tmu, llc = self._fresh_state(trace, sink)
         gqa = self.policy.gqa_variant
         led = _RoundLedger(self, llc, trace, record_history, sink)
-        seen = None
+        seen = np.zeros(0, dtype=bool)
         for ct in segments:
-            if seen is None:
-                # the dense seen-bitmap layout is global across segments
-                seen = np.zeros(ct.n_seen_lines, dtype=bool)
+            # the dense seen-bitmap layout is global across segments;
+            # grow (never shrink) when a segment raises the high-water
+            # mark — new lines start unseen, exactly like a monolithic
+            # allocation would
+            seen = _grow_seen(seen, ct.n_seen_lines)
             self._consume_segment(ct, geom, tmu, llc, led, seen, gqa)
         return led.result(trace, self.policy.name, cfg.freq_ghz)
+
+    def run_stream(self, stream, *, name: str = "replay",
+                   record_history: bool = True,
+                   events: Optional[EventSink] = None) -> SimResult:
+        """Consume an *open-ended* stream of
+        :class:`~repro.dataflows.stream.ReplaySegment` items — segments
+        whose tensor population changes over time (the serving-replay
+        path, DESIGN.md §11).
+
+        Unlike :meth:`run_segments`, which assumes one fixed trace with
+        all tensors registered up front, each segment here carries its
+        own TMU registrations (``new_tensors``, applied before the
+        segment's rounds), retirements (``clear_tids``, applied after —
+        the paper's second specialized instruction at request
+        completion), and recycled seen-bitmap ranges (``seen_resets``,
+        zeroed before, so a reused dense range observes cold misses
+        exactly as a fresh monolithic allocation would).  Cache, gear,
+        ledger, and dead-FIFO state persist across segments, so on a
+        small seed the counters and the raw event stream are
+        bit-identical to lowering the whole replay into one
+        ``DataflowSpec`` and calling :meth:`run`.
+        """
+        cfg = self.cfg
+        sink = self._resolve_sink(events)
+        n_cores = cfg.n_cores
+        header = Trace(name=name, tensors={},
+                       core_steps=[[] for _ in range(n_cores)],
+                       core_group=[-1] * n_cores,
+                       core_is_leader=[True] * n_cores,
+                       line_bytes=cfg.line_bytes)
+        geom, tmu, llc = self._fresh_state(header, sink)
+        gqa = self.policy.gqa_variant
+        led = _RoundLedger(self, llc, header, record_history, sink)
+        seen = np.zeros(0, dtype=bool)
+        for seg in stream:
+            seen = _grow_seen(seen, seg.n_seen_lines)
+            for s0, s1 in seg.seen_resets:
+                seen[s0:s1] = False
+            if seg.new_tensors:
+                tmu.register_many(seg.new_tensors)
+                if sink is not None:
+                    sink.register_tensors(seg.new_tensors)
+            self._consume_segment(seg.ct, geom, tmu, llc, led, seen, gqa)
+            for tid in seg.clear_tids:
+                tmu.clear(tid)
+        return led.result(header, self.policy.name, cfg.freq_ghz)
 
     def _consume_segment(self, ct, geom, tmu, llc, led, seen,
                          gqa) -> None:
@@ -607,6 +655,15 @@ class Simulator:
             led.end_round(codes, u_addrs, counts - 1, flops_round)
 
         return led.result(trace, self.policy.name, cfg.freq_ghz)
+
+
+def _grow_seen(seen: np.ndarray, n_lines: int) -> np.ndarray:
+    """Grow the dense seen bitmap to ``n_lines`` (new lines unseen)."""
+    if n_lines <= seen.shape[0]:
+        return seen
+    grown = np.zeros(n_lines, dtype=bool)
+    grown[:seen.shape[0]] = seen
+    return grown
 
 
 PolicyLike = Union[str, PolicyConfig]

@@ -276,7 +276,9 @@ class CompiledTrace:
     # ------------------------------------------------------------------
     @classmethod
     def build(cls, trace: Trace, line_bytes: int, round_start: int = 0,
-              round_stop: Optional[int] = None) -> "CompiledTrace":
+              round_stop: Optional[int] = None,
+              dense_map: Optional[Dict[int, int]] = None,
+              n_seen_lines: Optional[int] = None) -> "CompiledTrace":
         """Lower ``trace`` (or the round window ``[round_start,
         round_stop)`` of it) to the flat CSR arrays.
 
@@ -287,6 +289,13 @@ class CompiledTrace:
         boundary.  The dense seen-bitmap layout stays global
         (``n_seen_lines`` covers every tensor) so one bitmap spans all
         segments of a run.
+
+        ``dense_map``/``n_seen_lines`` override the per-tensor dense
+        offsets: the generator-driven replay lowering
+        (``repro.dataflows.stream``) recycles retired tensors' bitmap
+        ranges, so its offsets come from an external allocator instead
+        of the cumulative layout below (which would grow with every
+        tensor ever declared).
         """
         if round_stop is None:
             round_stop = trace.n_rounds
@@ -295,11 +304,15 @@ class CompiledTrace:
         tr_lb = trace.line_bytes
 
         # dense "seen"-bitmap layout: one contiguous range per tensor
-        dense_off: Dict[int, int] = {}
-        n_seen = 0
-        for tid, m in tensors.items():
-            dense_off[tid] = n_seen
-            n_seen += m.size_bytes // line_bytes
+        if dense_map is not None:
+            dense_off = dense_map
+            n_seen = int(n_seen_lines)
+        else:
+            dense_off = {}
+            n_seen = 0
+            for tid, m in tensors.items():
+                dense_off[tid] = n_seen
+                n_seen += m.size_bytes // line_bytes
 
         # one record per bulk tile transfer (expanded to lines vectorized)
         p_round: List[int] = []

@@ -18,6 +18,8 @@ from .reuse import ReuseProfile, lower_to_reuse_profile
 from .scenarios import (decode_paged_spec, mlp_chain_spec, moe_ffn_spec,
                         prefix_share_spec, spec_decode_spec, ssd_scan_spec,
                         transformer_layer_spec)
+from .stream import (DEFAULT_CHUNK_LINES, ReplaySegment, SpecEmitter,
+                     StreamEmitter)
 from .suite import (SUITE_POLICIES, SuiteCase, build_suite, registry_keys,
                     suite_case)
 
@@ -33,6 +35,7 @@ __all__ = [
     "decode_paged_spec", "mlp_chain_spec", "moe_ffn_spec",
     "prefix_share_spec", "spec_decode_spec", "ssd_scan_spec",
     "transformer_layer_spec",
+    "DEFAULT_CHUNK_LINES", "ReplaySegment", "SpecEmitter", "StreamEmitter",
     "SUITE_POLICIES", "SuiteCase", "build_suite", "registry_keys",
     "suite_case",
 ]

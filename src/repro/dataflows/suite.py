@@ -191,6 +191,24 @@ def _mt_spec_ssd(full: bool, n_cores: int) -> SuiteCase:
         expect_dbp_win=True)
 
 
+def _serve_replay(full: bool, n_cores: int) -> SuiteCase:
+    # the §VI-F regime end to end: bursty arrivals through the
+    # continuous-batching scheduler, so completed requests' KV pages sit
+    # dead in the LLC while their slots refill — the at-tier protects
+    # live KV against the bypassed Q/O stream and DBP reclaims the dead
+    # pages at retirement cadence (at+dbp ≈ 1.25×/1.14× over LRU under
+    # a 128 KB LLC that holds roughly the live working set)
+    from repro.serve.replay import ReplayConfig, replay_spec
+    from repro.serve.traffic import TrafficConfig
+    traffic = TrafficConfig(n_requests=128 if full else 96, seed=7,
+                            process="bursty")
+    spec, _ = replay_spec(traffic, ReplayConfig(n_cores=n_cores))
+    return SuiteCase(
+        "serve-replay", spec,
+        SimConfig(n_cores=n_cores, llc_bytes=128 * 1024),
+        expect_dbp_win=True)
+
+
 #: key → builder thunk, in suite order; ``build_suite`` materializes all
 #: of them, ``suite_case`` exactly one
 _REGISTRY: Dict[str, Callable[[bool, int], SuiteCase]] = {
@@ -206,6 +224,7 @@ _REGISTRY: Dict[str, Callable[[bool, int], SuiteCase]] = {
     "prefix-share": _prefix_share,
     "mt-prefill-decode": _mt_prefill_decode,
     "mt-spec-ssd": _mt_spec_ssd,
+    "serve-replay": _serve_replay,
 }
 
 

@@ -1,3 +1,19 @@
-from .engine import Request, ServeEngine
+"""Serving layer: the JAX engine plus the jax-free replay stack.
 
-__all__ = ["Request", "ServeEngine"]
+``Request``/``ServeEngine`` pull in the JAX model stack, so they are
+resolved lazily (PEP 562): the traffic-scale replay modules
+(:mod:`repro.serve.traffic`, :mod:`repro.serve.replay`,
+:mod:`repro.serve.scheduler`) share this package but must stay
+importable from suite/conformance worker processes that never touch JAX.
+"""
+
+from .scheduler import ServeTruncation, SlotScheduler
+
+__all__ = ["Request", "ServeEngine", "ServeTruncation", "SlotScheduler"]
+
+
+def __getattr__(name):
+    if name in ("Request", "ServeEngine"):
+        from . import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

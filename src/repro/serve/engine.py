@@ -26,6 +26,8 @@ from repro.configs import ArchConfig
 from repro.core.tmu import TMU, TensorMeta
 from repro.models import Cache, decode_step, init_cache, prefill
 
+from .scheduler import ServeTruncation, SlotScheduler
+
 
 @dataclass
 class Request:
@@ -45,9 +47,8 @@ class ServeEngine:
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.cache = init_cache(cfg, max_batch, max_seq)
-        self.slot_req: List[Optional[Request]] = [None] * max_batch
+        self.sched: SlotScheduler[Request] = SlotScheduler(max_batch)
         self.slot_pos = np.zeros(max_batch, dtype=np.int32)
-        self.queue: List[Request] = []
         self.greedy = greedy
         # TMU tracking slot lifetimes (dead-block analogue)
         self._tmu = TMU(tensor_entries=max_batch * 2)
@@ -60,16 +61,10 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def add_request(self, req: Request) -> None:
-        self.queue.append(req)
-
-    def _free_slots(self) -> List[int]:
-        return [i for i, r in enumerate(self.slot_req) if r is None]
+        self.sched.add(req)
 
     def _admit(self) -> None:
-        for slot in self._free_slots():
-            if not self.queue:
-                break
-            req = self.queue.pop(0)
+        for slot, req in self.sched.admit():
             self._start(slot, req)
 
     def _start(self, slot: int, req: Request) -> None:
@@ -78,7 +73,6 @@ class ServeEngine:
         plen = req.prompt.shape[0]
         # splice this request's prefilled KV/state into the pooled cache
         self.cache = _splice(self.cache, pcache, slot, plen, self.max_seq)
-        self.slot_req[slot] = req
         self.slot_pos[slot] = plen
         first = int(jnp.argmax(logits[0])) if self.greedy else int(
             jax.random.categorical(jax.random.key(req.uid), logits[0]))
@@ -89,23 +83,21 @@ class ServeEngine:
             n_acc=req.max_new_tokens))
 
     def _retire(self, slot: int) -> None:
-        req = self.slot_req[slot]
-        if req is not None:
-            req.done = True
-            self._tmu.clear(req.uid)      # slot retires → space reusable
-        self.slot_req[slot] = None
+        req = self.sched.release(slot)
+        req.done = True
+        self._tmu.clear(req.uid)          # slot retires → space reusable
         self.slot_pos[slot] = 0
 
     # ------------------------------------------------------------------
     def step(self) -> int:
         """One batched decode step; returns #active slots."""
         self._admit()
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        active = self.sched.active_slots()
         if not active:
             return 0
         toks = np.zeros((self.max_batch, 1), dtype=np.int32)
         for i in active:
-            toks[i, 0] = self.slot_req[i].tokens_out[-1]
+            toks[i, 0] = self.sched.slots[i].tokens_out[-1]
         # batched decode at the max position (positions are per-slot via
         # cache.pos; we use per-slot positions by patching pos before the
         # call — a single scalar pos requires aligned decoding, so the
@@ -119,7 +111,7 @@ class ServeEngine:
                 self.params, jnp.asarray(toks), cache)
             self.cache = _merge_slots(self.cache, new_cache, slots)
             for i in slots:
-                req = self.slot_req[i]
+                req = self.sched.slots[i]
                 nxt = int(jnp.argmax(logits[i, 0]))
                 req.tokens_out.append(nxt)
                 self.slot_pos[i] += 1
@@ -131,10 +123,19 @@ class ServeEngine:
                     self._retire(i)
         return len(active)
 
-    def run_to_completion(self, max_steps: int = 1000) -> None:
-        for _ in range(max_steps):
-            if self.step() == 0 and not self.queue:
-                return
+    def run_to_completion(self, max_steps: int = 1000) -> int:
+        """Drive :meth:`step` until every request finishes; returns the
+        number of steps taken.  Raises :class:`ServeTruncation` if the
+        budget runs out with requests still active or queued (previously
+        this exited silently, making truncated generations look
+        finished)."""
+        for n in range(max_steps):
+            if self.step() == 0 and self.sched.drained:
+                return n + 1
+        if not self.sched.drained:
+            raise ServeTruncation(max_steps, self.sched.n_active,
+                                  self.sched.n_queued)
+        return max_steps
 
 
 # ---------------------------------------------------------------------------

@@ -1,5 +1,5 @@
-"""scripts/suite_gate.py budget plumbing: --sps-budget / REPRO_SPS_BUDGET
-replace the formerly hardcoded seconds-per-scenario limit."""
+"""scripts/suite_gate.py budget plumbing (--sps-budget /
+REPRO_SPS_BUDGET) and the pinned at-row saturation-residue ceilings."""
 
 import json
 import os
@@ -11,13 +11,13 @@ REPO = Path(__file__).resolve().parents[1]
 GATE = REPO / "scripts" / "suite_gate.py"
 
 
-def _report(tmp_path, sps=3.0):
+def _report(tmp_path, sps=3.0, rows=None):
     path = tmp_path / "suite_bench.json"
     path.write_text(json.dumps({
         "model_rel_err_by_scenario": {"profile": {"matmul": 0.05},
                                       "closed": {"matmul": 0.05}},
         "dbp_win_scenarios": [],
-        "rows": {},
+        "rows": rows or {},
         "perf": {"seconds_per_scenario": sps, "case_seconds": {}},
     }))
     return path
@@ -54,4 +54,26 @@ def test_env_tightens_budget(tmp_path):
 def test_flag_overrides_env(tmp_path):
     proc = _gate(_report(tmp_path), "--sps-budget", "10.0",
                  env={"REPRO_SPS_BUDGET": "1.0"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# --- pinned at-row saturation residue (over-protection, carried PR 5) ------
+def test_at_residue_within_ceiling_passes(tmp_path):
+    rows = {"moe-ffn-at": {"model_rel_err_profile": 0.17},
+            "decode-paged-at": {"model_rel_err_profile": 0.10}}
+    proc = _gate(_report(tmp_path, rows=rows))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_at_residue_over_ceiling_fails(tmp_path):
+    rows = {"moe-ffn-at": {"model_rel_err_profile": 0.25}}
+    proc = _gate(_report(tmp_path, rows=rows))
+    assert proc.returncode != 0
+    assert "residue ceiling" in proc.stderr + proc.stdout
+
+
+def test_at_residue_absent_row_tolerated(tmp_path):
+    # a smoke report without the pinned scenarios must not trip the check
+    rows = {"matmul-at": {"model_rel_err_profile": 0.9}}
+    proc = _gate(_report(tmp_path, rows=rows))
     assert proc.returncode == 0, proc.stdout + proc.stderr
