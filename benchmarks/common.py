@@ -11,7 +11,9 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Dict, Iterable, List
+from typing import Dict
+from typing import Iterable
+from typing import List
 
 REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports",
                           "benchmarks")

@@ -9,10 +9,15 @@ from __future__ import annotations
 import json
 import os
 
-from repro.core import fa2_counts, get_workload, predict
+from repro.core import fa2_counts
+from repro.core import get_workload
+from repro.core import predict
 from repro.core.analytical import ModelParams
 
-from .common import MB, Timer, emit, save
+from .common import MB
+from .common import Timer
+from .common import emit
+from .common import save
 
 
 def _fitted_params() -> ModelParams:
@@ -56,13 +61,13 @@ def run(full: bool = False) -> dict:
                         }
     g = max(v["speedup_vs_lru"] for k, v in table.items()
             if k.startswith("gemma3") and "-all" in k)
-    l = max(v["speedup_vs_lru"] for k, v in table.items()
-            if k.startswith("llama3-70b") and "-all" in k)
+    ll = max(v["speedup_vs_lru"] for k, v in table.items()
+             if k.startswith("llama3-70b") and "-all" in k)
     lb = max(v["speedup_vs_lru"] for k, v in table.items()
              if k.startswith("llama3-70b") and "bypass+dbp" in k)
     emit("fig10_longctx", t.elapsed_us,
          f"gemma_peak_all={g:.2f}x(paper~1.30);"
-         f"llama70b_peak_all={l:.2f}x(paper~1.12);"
+         f"llama70b_peak_all={ll:.2f}x(paper~1.12);"
          f"llama70b_gqa_bypass={lb:.2f}x(paper~1.0)")
     save("fig10_longctx", table)
     return table

@@ -5,9 +5,14 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import SimConfig, build_fa2_trace, get_workload
+from repro.core import SimConfig
+from repro.core import build_fa2_trace
+from repro.core import get_workload
 
-from .common import Timer, emit, policy_sweep, save
+from .common import Timer
+from .common import emit
+from .common import policy_sweep
+from .common import save
 
 
 def run(full: bool = False) -> dict:

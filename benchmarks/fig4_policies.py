@@ -6,9 +6,15 @@ Default grid runs the 2K rows; ``--full`` adds 4K.
 
 from __future__ import annotations
 
-from repro.core import SimConfig, build_fa2_trace, get_workload
+from repro.core import SimConfig
+from repro.core import build_fa2_trace
+from repro.core import get_workload
 
-from .common import MB, Timer, emit, policy_sweep, save
+from .common import MB
+from .common import Timer
+from .common import emit
+from .common import policy_sweep
+from .common import save
 
 POLICIES = ("lru", "at", "lru+bypass", "at+bypass")
 

@@ -7,10 +7,16 @@ with and without the gqa variant (blind bypassing degrades, §IV-E).
 
 from __future__ import annotations
 
-from repro.core import SimConfig, build_fa2_trace, get_workload, \
-    named_policy, run_policy
+from repro.core import SimConfig
+from repro.core import build_fa2_trace
+from repro.core import get_workload
+from repro.core import named_policy
+from repro.core import run_policy
 
-from .common import MB, Timer, emit, save
+from .common import MB
+from .common import Timer
+from .common import emit
+from .common import save
 
 
 def run(full: bool = False) -> dict:

@@ -8,11 +8,21 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (SimConfig, build_fa2_trace, fa2_counts, fit_params,
-                        get_workload, kendall_tau, named_policy, predict,
-                        r_squared, run_policy)
+from repro.core import SimConfig
+from repro.core import build_fa2_trace
+from repro.core import fa2_counts
+from repro.core import fit_params
+from repro.core import get_workload
+from repro.core import kendall_tau
+from repro.core import named_policy
+from repro.core import predict
+from repro.core import r_squared
+from repro.core import run_policy
 
-from .common import MB, Timer, emit, save
+from .common import MB
+from .common import Timer
+from .common import emit
+from .common import save
 
 # (model-policy, simulator-policy, bypass-variant)
 POLICY_MAP = [
@@ -48,10 +58,10 @@ def run(full: bool = False) -> dict:
                         pts.append((counts, mb * MB, mpol, var, gqa,
                                     counts.n_rounds, res.cycles))
         params = fit_params(pts)
-        pred = np.array([predict(c, l, p, params=params,
+        pred = np.array([predict(c, sz, p, params=params,
                                  bypass_variant=v, gqa=g,
                                  n_rounds=r).cycles
-                         for (c, l, p, v, g, r, _) in pts])
+                         for (c, sz, p, v, g, r, _) in pts])
         target = np.array([x[-1] for x in pts])
         r2 = r_squared(pred, target)
         tau = kendall_tau(pred, target)
@@ -61,9 +71,9 @@ def run(full: bool = False) -> dict:
         "paper_reference": {"r_squared": 0.997, "kendall_tau": 0.934},
         "fitted_params": {"theta1": params.theta1, "theta2": params.theta2,
                           "theta3": params.theta3, "lambda": params.lam},
-        "points": [{"name": c.name, "llc": l, "policy": p,
+        "points": [{"name": c.name, "llc": sz, "policy": p,
                     "sim_cycles": tc, "pred_cycles": float(pc)}
-                   for (c, l, p, v, g, r, tc), pc in zip(pts, pred)],
+                   for (c, sz, p, v, g, r, tc), pc in zip(pts, pred)],
     }
     emit("fig9_validation", t.elapsed_us,
          f"R2={r2:.3f}(paper 0.997);tau={tau:.3f}(paper 0.934);"

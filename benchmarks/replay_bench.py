@@ -22,7 +22,8 @@ from __future__ import annotations
 import resource
 import time
 
-from .common import emit, save
+from .common import emit
+from .common import save
 
 #: policy axis: baseline, the dead-block predictor the serving claim
 #: (§VI-F) rests on, and the at-composed variant.  DBP wins at every

@@ -7,7 +7,9 @@ import glob
 import json
 import os
 
-from .common import Timer, emit, save
+from .common import Timer
+from .common import emit
+from .common import save
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "reports",
                           "dryrun")

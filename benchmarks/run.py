@@ -14,10 +14,20 @@ import argparse
 import sys
 import traceback
 
-from . import (common, fig3_hitrate, fig4_policies, fig5_bbits, fig6_bypass,
-               fig7_gear, fig8_dbp, fig9_validation, fig10_longctx,
-               replay_bench, roofline_bench, suite_bench, sweep_perf,
-               table2_tmu)
+from . import common
+from . import fig10_longctx
+from . import fig3_hitrate
+from . import fig4_policies
+from . import fig5_bbits
+from . import fig6_bypass
+from . import fig7_gear
+from . import fig8_dbp
+from . import fig9_validation
+from . import replay_bench
+from . import roofline_bench
+from . import suite_bench
+from . import sweep_perf
+from . import table2_tmu
 
 BENCHMARKS = {
     "table2_tmu": table2_tmu.run,

@@ -34,19 +34,28 @@ Run a single scenario (CI smoke — still through the pool driver):
 
 from __future__ import annotations
 
+from concurrent.futures import ProcessPoolExecutor
+from dataclasses import dataclass
+from dataclasses import field
 import os
 import time
-from concurrent.futures import ProcessPoolExecutor
-from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core import (fit_params, named_policy, predict_batch,
-                        run_policies, timeline_digest)
-from repro.dataflows import (SUITE_POLICIES, lower_to_counts,
-                             lower_to_trace, registry_keys, suite_case)
+from repro.core import fit_params
+from repro.core import named_policy
+from repro.core import predict_batch
+from repro.core import run_policies
+from repro.core import timeline_digest
+from repro.dataflows import SUITE_POLICIES
+from repro.dataflows import lower_to_counts
+from repro.dataflows import lower_to_trace
+from repro.dataflows import registry_keys
+from repro.dataflows import suite_case
 
-from .common import Timer, emit, save
+from .common import Timer
+from .common import emit
+from .common import save
 
 MODELS = ("closed", "profile")
 

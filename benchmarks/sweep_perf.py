@@ -14,10 +14,16 @@ Python walk) the batched path measures ~5-7× on this workload.
 
 from __future__ import annotations
 
-from repro.core import (SimConfig, build_fa2_trace, get_workload,
-                        named_policy, run_policies, run_policy)
+from repro.core import SimConfig
+from repro.core import build_fa2_trace
+from repro.core import get_workload
+from repro.core import named_policy
+from repro.core import run_policies
+from repro.core import run_policy
 
-from .common import Timer, emit, save
+from .common import Timer
+from .common import emit
+from .common import save
 
 POLICIES = ("lru", "at", "at+dbp", "at+bypass", "all")
 

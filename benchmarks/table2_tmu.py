@@ -4,11 +4,13 @@ throughput microbenchmark of the dead-FIFO + priority path."""
 
 from __future__ import annotations
 
-import numpy as np
+from repro.core.tmu import TMU
+from repro.core.tmu import TMUParams
+from repro.core.tmu import TensorMeta
 
-from repro.core.tmu import TMU, TMUParams, TensorMeta
-
-from .common import Timer, emit, save
+from .common import Timer
+from .common import emit
+from .common import save
 
 
 def run(full: bool = False) -> dict:

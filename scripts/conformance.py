@@ -22,13 +22,16 @@ from __future__ import annotations
 
 import argparse
 import json
-import sys
 from pathlib import Path
+import sys
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from repro.conformance import (golden_path, load_golden, matrix_entries,
-                               run_matrix, save_golden)
+from repro.conformance import golden_path
+from repro.conformance import load_golden
+from repro.conformance import matrix_entries
+from repro.conformance import run_matrix
+from repro.conformance import save_golden
 
 
 def main(argv=None) -> int:

@@ -1,0 +1,422 @@
+#!/usr/bin/env python
+"""Offline approximation of the repo's ruff gate (pyproject.toml).
+
+CI runs real ruff; this tool reproduces the subset of its verdicts that
+matter for keeping the tree clean from environments without network
+access (where ruff cannot be installed):
+
+* **import order/format** — the exact canonical form of the configured
+  isort profile (force-single-line, case-sensitive ASCII, sections
+  future/stdlib/third-party/first-party/local, one blank line between
+  sections); ``--fix`` rewrites import blocks in place,
+* **F401** unused imports (``__all__`` counts as use; ``--fix`` does
+  not remove them — they are reported for manual review),
+* **E401** multiple imports on one line, **E402** late module imports
+  (with the pyproject per-file ignores), **E711/E712** ``==`` against
+  None/True/False, **E722** bare except, **E731** lambda assignment,
+  **E741** ambiguous single-letter names (l/O/I), **E701/E702**
+  compound statements.
+
+    python scripts/dev_lint.py            # check src/tests/scripts/benchmarks
+    python scripts/dev_lint.py --fix      # rewrite import blocks in place
+
+Import blocks containing interior comments are never rewritten (a
+comment would have to move with its statement); they are reported so
+the imports can be reordered by hand.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+from pathlib import Path
+import sys
+
+REPO = Path(__file__).resolve().parents[1]
+ROOTS = ("src", "tests", "scripts", "benchmarks")
+FIRST_PARTY = ("repro", "benchmarks")
+E402_IGNORED = ("scripts", "tests", "benchmarks")
+
+STDLIB = getattr(sys, "stdlib_module_names", frozenset())
+
+
+def _section(node: ast.stmt) -> int:
+    if isinstance(node, ast.ImportFrom):
+        if node.level:
+            return 4
+        mod = node.module or ""
+    else:
+        mod = node.names[0].name
+    top = mod.split(".")[0]
+    if top == "__future__":
+        return 0
+    if top in STDLIB:
+        return 1
+    if top in FIRST_PARTY:
+        return 3
+    return 2
+
+
+def _single_lines(node: ast.stmt):
+    """Explode one import statement into (sort_key, rendered_line)."""
+    if isinstance(node, ast.Import):
+        for a in node.names:
+            line = f"import {a.name}" + (f" as {a.asname}" if a.asname
+                                         else "")
+            yield (_section(node), a.name, 0, "", a.asname or ""), line
+    else:
+        dots = "." * node.level
+        mod = f"{dots}{node.module or ''}"
+        # relative imports sort furthest-to-closest, then by module name
+        mkey = (f"\x00{255 - node.level:03d}.{node.module or ''}"
+                if node.level else node.module or "")
+        for a in node.names:
+            line = f"from {mod} import {a.name}" + (
+                f" as {a.asname}" if a.asname else "")
+            yield (_section(node), mkey, 1, a.name, a.asname or ""), line
+
+
+def _render_block(nodes) -> str:
+    entries = sorted(e for n in nodes for e in _single_lines(n))
+    out, prev_sec = [], None
+    for (sec, *_), line in entries:
+        if prev_sec is not None and sec != prev_sec:
+            out.append("")
+        out.append(line)
+        prev_sec = sec
+    return "\n".join(out)
+
+
+def _import_blocks(tree: ast.Module, lines):
+    """Contiguous top-level import runs (blank lines allowed inside,
+    any other statement or comment line ends the block)."""
+    blocks, cur, end = [], [], None
+    for node in tree.body:
+        is_imp = isinstance(node, (ast.Import, ast.ImportFrom))
+        if is_imp and cur:
+            gap = range(end, node.lineno - 1)   # 0-based between lines
+            clean = all(not lines[i].strip()
+                        or lines[i].lstrip().startswith("#")
+                        for i in gap)
+            has_comment = any(lines[i].lstrip().startswith("#")
+                              for i in gap)
+            if clean and not has_comment:
+                cur.append(node)
+                end = node.end_lineno
+                continue
+        if cur:
+            blocks.append(cur)
+            cur = []
+        if is_imp:
+            cur = [node]
+            end = node.end_lineno
+    if cur:
+        blocks.append(cur)
+    return blocks
+
+
+def _has_interior_comment(lines, lo, hi) -> bool:
+    return any(lines[i].lstrip().startswith("#") for i in range(lo, hi))
+
+
+class _Checker(ast.NodeVisitor):
+    def __init__(self, rel: str, src: str, tree: ast.Module):
+        self.rel = rel
+        self.problems: list[str] = []
+        self.tree = tree
+        self.src = src
+
+    def err(self, node, code, msg):
+        self.problems.append(f"{self.rel}:{node.lineno}: {code} {msg}")
+
+    # E711/E712/E721/F632 -----------------------------------------------
+    def visit_Compare(self, node: ast.Compare):
+        for op, right in zip(node.ops, node.comparators):
+            if isinstance(op, (ast.Eq, ast.NotEq)):
+                if isinstance(right, ast.Constant):
+                    if right.value is None:
+                        self.err(node, "E711", "comparison to None "
+                                 "(use 'is None')")
+                    elif right.value is True or right.value is False:
+                        self.err(node, "E712", "comparison to "
+                                 f"{right.value} (use 'is')")
+                if (isinstance(right, ast.Call)
+                        and isinstance(right.func, ast.Name)
+                        and right.func.id == "type"):
+                    self.err(node, "E721", "type comparison with == "
+                             "(use isinstance)")
+            elif isinstance(op, (ast.Is, ast.IsNot)):
+                if (isinstance(right, ast.Constant)
+                        and isinstance(right.value, (str, int, float,
+                                                     bytes, tuple))
+                        and right.value is not True
+                        and right.value is not False
+                        and right.value is not None):
+                    self.err(node, "F632", "'is' comparison with a "
+                             "literal (use ==)")
+        self.generic_visit(node)
+
+    # E713/E714 ---------------------------------------------------------
+    def visit_UnaryOp(self, node: ast.UnaryOp):
+        if isinstance(node.op, ast.Not) and isinstance(node.operand,
+                                                       ast.Compare):
+            cmp = node.operand
+            if len(cmp.ops) == 1:
+                if isinstance(cmp.ops[0], ast.In):
+                    self.err(node, "E713", "use 'not in' for membership")
+                elif isinstance(cmp.ops[0], ast.Is):
+                    self.err(node, "E714", "use 'is not' for identity")
+        self.generic_visit(node)
+
+    # F541 --------------------------------------------------------------
+    def visit_JoinedStr(self, node: ast.JoinedStr):
+        if not any(isinstance(v, ast.FormattedValue)
+                   for v in node.values):
+            self.err(node, "F541", "f-string without placeholders")
+        self.generic_visit(node)
+
+    def visit_FormattedValue(self, node: ast.FormattedValue):
+        # a format spec is itself a JoinedStr with no placeholders —
+        # visiting it would false-positive F541 on every ':.3f'
+        self.visit(node.value)
+
+    # E722 --------------------------------------------------------------
+    def visit_ExceptHandler(self, node):
+        if node.type is None:
+            self.err(node, "E722", "bare except")
+        self.generic_visit(node)
+
+    # E731 --------------------------------------------------------------
+    def visit_Assign(self, node: ast.Assign):
+        if isinstance(node.value, ast.Lambda):
+            self.err(node, "E731", "lambda assignment (use def)")
+        self._ambiguous_targets(node.targets, node)
+        self.generic_visit(node)
+
+    # E741 --------------------------------------------------------------
+    AMBIGUOUS = {"l", "O", "I"}
+
+    def _ambiguous_targets(self, targets, node):
+        for t in targets:
+            for n in ast.walk(t):
+                if (isinstance(n, ast.Name) and n.id in self.AMBIGUOUS
+                        and isinstance(n.ctx, ast.Store)):
+                    self.err(node, "E741", f"ambiguous name {n.id!r}")
+
+    def visit_For(self, node):
+        self._ambiguous_targets([node.target], node)
+        self.generic_visit(node)
+
+    def visit_comprehension_targets(self, gens, node):
+        self._ambiguous_targets([g.target for g in gens], node)
+
+    def visit_ListComp(self, node):
+        self.visit_comprehension_targets(node.generators, node)
+        self.generic_visit(node)
+
+    visit_SetComp = visit_ListComp
+    visit_GeneratorExp = visit_ListComp
+
+    def visit_DictComp(self, node):
+        self.visit_comprehension_targets(node.generators, node)
+        self.generic_visit(node)
+
+    def _check_args(self, node):
+        a = node.args
+        for arg in (a.posonlyargs + a.args + a.kwonlyargs
+                    + ([a.vararg] if a.vararg else [])
+                    + ([a.kwarg] if a.kwarg else [])):
+            if arg.arg in self.AMBIGUOUS:
+                self.err(node, "E741", f"ambiguous arg {arg.arg!r}")
+
+    def visit_FunctionDef(self, node):
+        self._check_args(node)
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+    visit_Lambda = visit_FunctionDef
+
+    # E401 --------------------------------------------------------------
+    def visit_Import(self, node):
+        if len(node.names) > 1:
+            self.err(node, "E401", "multiple imports on one line")
+        self.generic_visit(node)
+
+
+def _f401(rel: str, tree: ast.Module, problems: list) -> None:
+    bound: dict = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                name = a.asname or a.name.split(".")[0]
+                bound.setdefault(name, node.lineno)
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                bound.setdefault(a.asname or a.name, node.lineno)
+    used = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif (isinstance(node, ast.Constant)
+              and isinstance(node.value, str)):
+            used.add(node.value)          # __all__ entries / doc refs
+    for name, lineno in sorted(bound.items(), key=lambda kv: kv[1]):
+        if name not in used:
+            problems.append(f"{rel}:{lineno}: F401 {name!r} imported "
+                            f"but unused")
+
+
+def _f841(rel: str, tree: ast.Module, problems: list) -> None:
+    """Unused local variables (simple assignments only; tuple-unpacking
+    and underscore-prefixed names are exempt, matching ruff defaults)."""
+
+    def walk_scope(node, skip_nested=True):
+        """Yield nodes of one function scope, not descending into
+        nested function/class scopes (for assignment attribution)."""
+        stack = list(ast.iter_child_nodes(node))
+        while stack:
+            n = stack.pop()
+            yield n
+            if skip_nested and isinstance(
+                    n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                        ast.ClassDef, ast.Lambda)):
+                continue
+            stack.extend(ast.iter_child_nodes(n))
+
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        declared = set()
+        assigns: dict = {}
+        for n in walk_scope(fn):
+            if isinstance(n, (ast.Global, ast.Nonlocal)):
+                declared.update(n.names)
+            elif isinstance(n, ast.Assign):
+                for t in n.targets:
+                    if isinstance(t, ast.Name):
+                        assigns.setdefault(t.id, n.lineno)
+            elif isinstance(n, ast.AnnAssign) and n.value is not None:
+                if isinstance(n.target, ast.Name):
+                    assigns.setdefault(n.target.id, n.lineno)
+            elif isinstance(n, ast.ExceptHandler) and n.name:
+                assigns.setdefault(n.name, n.lineno)
+        loads = {n.id for n in ast.walk(fn)
+                 if isinstance(n, ast.Name)
+                 and not isinstance(n.ctx, ast.Store)}
+        for name, lineno in sorted(assigns.items(), key=lambda kv: kv[1]):
+            if (name not in loads and name not in declared
+                    and not name.startswith("_")):
+                problems.append(f"{rel}:{lineno}: F841 local variable "
+                                f"{name!r} assigned but never used")
+
+
+def _e402(rel: str, tree: ast.Module, problems: list) -> None:
+    if any(rel.startswith(p + "/") for p in E402_IGNORED):
+        return
+    code_seen = False
+    for node in tree.body:
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            if code_seen:
+                problems.append(f"{rel}:{node.lineno}: E402 module "
+                                f"import not at top of file")
+        elif isinstance(node, ast.Expr) and isinstance(node.value,
+                                                       ast.Constant):
+            continue                      # docstring
+        elif (isinstance(node, (ast.If, ast.Try, ast.Assign))
+              and not code_seen):
+            # ruff tolerates guards/dunder assignments before imports
+            continue
+        else:
+            code_seen = True
+
+
+def _e701_702(rel: str, src: str, problems: list) -> None:
+    import io
+    import tokenize
+    depth = 0
+    for tok in tokenize.generate_tokens(io.StringIO(src).readline):
+        if tok.type == tokenize.OP:
+            if tok.string in "([{":
+                depth += 1
+            elif tok.string in ")]}":
+                depth -= 1
+            elif tok.string == ";" and depth == 0:
+                problems.append(f"{rel}:{tok.start[0]}: E702 statement "
+                                f"ends with a semicolon")
+
+
+def process(path: Path, fix: bool) -> list:
+    rel = path.relative_to(REPO).as_posix()
+    src = path.read_text()
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [f"{rel}:{e.lineno}: E999 {e.msg}"]
+    problems: list = []
+    lines = src.splitlines()
+
+    chk = _Checker(rel, src, tree)
+    chk.visit(tree)
+    problems += chk.problems
+    _f401(rel, tree, problems)
+    _f841(rel, tree, problems)
+    _e402(rel, tree, problems)
+    _e701_702(rel, src, problems)
+
+    # import-block canonical form ---------------------------------------
+    changed = False
+    for block in reversed(_import_blocks(tree, lines)):
+        lo = block[0].lineno - 1
+        hi = block[-1].end_lineno
+        if _has_interior_comment(lines, lo, hi):
+            got = "\n".join(lines[lo:hi])
+            want = _render_block(block)
+            if got != want:
+                problems.append(
+                    f"{rel}:{lo + 1}: I001 import block needs "
+                    f"reordering but carries comments — fix by hand")
+            continue
+        want = _render_block(block)
+        got = "\n".join(lines[lo:hi])
+        if got != want:
+            if fix:
+                lines[lo:hi] = want.split("\n")
+                changed = True
+            else:
+                problems.append(f"{rel}:{lo + 1}: I001 import block not "
+                                f"in canonical form")
+    if changed:
+        path.write_text("\n".join(lines) + ("\n" if src.endswith("\n")
+                                            else ""))
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", type=Path,
+                    help="files or directories (default: the repo roots)")
+    ap.add_argument("--fix", action="store_true",
+                    help="rewrite import blocks in place")
+    args = ap.parse_args(argv)
+
+    targets = [p.resolve() for p in args.paths] or [REPO / r for r in ROOTS]
+    files = []
+    for t in targets:
+        files.extend(sorted(t.rglob("*.py")) if t.is_dir() else [t])
+    all_problems = []
+    for f in files:
+        if "reports" in f.parts or "__pycache__" in f.parts:
+            continue
+        all_problems += process(f, args.fix)
+    for p in all_problems:
+        print(p)
+    print(f"# {len(files)} files, {len(all_problems)} problem(s)")
+    return 1 if all_problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

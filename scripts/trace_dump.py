@@ -16,12 +16,13 @@ work).
 from __future__ import annotations
 
 import argparse
-import sys
 from pathlib import Path
+import sys
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from repro.core import EventSink, Simulator
+from repro.core import EventSink
+from repro.core import Simulator
 from repro.core.events import decode_event
 from repro.core.policies import named_policy
 
@@ -48,10 +49,19 @@ def main(argv=None) -> int:
 
     from repro.dataflows import lower_to_trace
     from repro.dataflows.suite import suite_case
-    case = suite_case(args.scenario)
+    try:
+        case = suite_case(args.scenario)
+    except KeyError as e:
+        print(f"error: {e.args[0]}", file=sys.stderr)
+        return 2
+    try:
+        policy = named_policy(args.policy, gqa=case.gqa)
+    except (KeyError, ValueError):
+        print(f"error: unknown policy {args.policy!r}", file=sys.stderr)
+        return 2
     trace = lower_to_trace(case.spec)
     sink = EventSink()
-    sim = Simulator(case.cfg, named_policy(args.policy, gqa=case.gqa))
+    sim = Simulator(case.cfg, policy)
     res = sim.run(trace, record_history=False, engine=args.engine,
                   events=sink)
 

@@ -24,8 +24,12 @@ from __future__ import annotations
 import json
 import os
 import shutil
+from typing import Any
+from typing import Dict
+from typing import List
+from typing import Optional
+from typing import Tuple
 import zlib
-from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np

@@ -14,7 +14,9 @@ touching ``jax`` directly so every call site is version-proof.
 
 from __future__ import annotations
 
-from typing import Any, Sequence, Tuple
+from typing import Any
+from typing import Sequence
+from typing import Tuple
 
 import jax
 

@@ -7,9 +7,12 @@ ratio, MoE top-k, SSD chunking all preserved).
 
 from __future__ import annotations
 
+from dataclasses import dataclass
+from dataclasses import replace
 import importlib
-from dataclasses import dataclass, field, replace
-from typing import Dict, Optional, Tuple
+from typing import Dict
+from typing import Optional
+from typing import Tuple
 
 DENSE, MOE, SSM, HYBRID = "dense", "moe", "ssm", "hybrid"
 

@@ -5,7 +5,9 @@ expert d_ff 1408, vocab 102400; layer 0 uses a dense FFN (intermediate
 10944 in the published model — we use 8*1408=11264-class width via
 cfg.d_ff=10944).
 """
-from repro.configs import ArchConfig, MOE, MoESpec
+from repro.configs import ArchConfig
+from repro.configs import MOE
+from repro.configs import MoESpec
 
 ARCH = ArchConfig(
     name="deepseek-moe-16b", family=MOE,

@@ -5,7 +5,8 @@ d_ff 36864, vocab 256000; sliding window 4096 on local layers (every other
 layer global), attention softcap 50.0, final-logit softcap 30.0,
 query scale (d_model/n_heads)^-0.5 = 144^-0.5.
 """
-from repro.configs import ArchConfig, DENSE
+from repro.configs import ArchConfig
+from repro.configs import DENSE
 
 ARCH = ArchConfig(
     name="gemma2-27b", family=DENSE,

@@ -3,7 +3,8 @@
 [arXiv:2403.08295; hf]  28L, d_model 3072, 16H (kv=16: MHA on 7b; MQA is
 the 2b variant), head_dim 256, d_ff 24576, vocab 256000, GeGLU.
 """
-from repro.configs import ArchConfig, DENSE
+from repro.configs import ArchConfig
+from repro.configs import DENSE
 
 ARCH = ArchConfig(
     name="gemma-7b", family=DENSE,

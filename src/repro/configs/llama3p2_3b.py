@@ -3,7 +3,8 @@
 [hf:meta-llama/Llama-3.2-3B; unverified]  28L, d_model 3072, 24H GQA kv=8,
 head_dim 128, d_ff 8192, vocab 128256, rope theta 500k.
 """
-from repro.configs import ArchConfig, DENSE
+from repro.configs import ArchConfig
+from repro.configs import DENSE
 
 ARCH = ArchConfig(
     name="llama3.2-3b", family=DENSE,

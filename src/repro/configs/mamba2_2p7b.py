@@ -6,7 +6,9 @@ attention-free → the paper's KV-cache bypass/anti-thrash policies do not
 apply (DESIGN.md §4); the SSD chunk-state lifetime still maps to the
 dead-block insight.
 """
-from repro.configs import ArchConfig, SSM, SSMSpec
+from repro.configs import ArchConfig
+from repro.configs import SSM
+from repro.configs import SSMSpec
 
 ARCH = ArchConfig(
     name="mamba2-2.7b", family=SSM,

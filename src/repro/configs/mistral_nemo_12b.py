@@ -3,7 +3,8 @@
 [hf:mistralai/Mistral-Nemo-Base-2407; hf]  40L, d_model 5120, 32H GQA
 kv=8, head_dim 128, d_ff 14336, vocab 131072, rope theta 1e6.
 """
-from repro.configs import ArchConfig, DENSE
+from repro.configs import ArchConfig
+from repro.configs import DENSE
 
 ARCH = ArchConfig(
     name="mistral-nemo-12b", family=DENSE,

@@ -4,7 +4,9 @@
 head_dim 128, expert d_ff 1408, 2 shared experts, vocab 163840, first
 layer dense.
 """
-from repro.configs import ArchConfig, MOE, MoESpec
+from repro.configs import ArchConfig
+from repro.configs import MOE
+from repro.configs import MoESpec
 
 ARCH = ArchConfig(
     name="moonshot-v1-16b-a3b", family=MOE,

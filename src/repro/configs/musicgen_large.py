@@ -5,7 +5,8 @@ vocab 2048 (one EnCodec codebook; the audio frontend — EnCodec encoder and
 the codebook delay pattern — is a stub per spec: ``input_specs`` provides
 precomputed frame token ids).
 """
-from repro.configs import ArchConfig, DENSE
+from repro.configs import ArchConfig
+from repro.configs import DENSE
 
 ARCH = ArchConfig(
     name="musicgen-large", family=DENSE,

@@ -6,7 +6,8 @@ vocab 152064.  M-RoPE splits rotary frequencies into temporal/height/width
 sections (16, 24, 24 half-dims).  The vision tower is a stub per spec:
 ``input_specs`` provides token ids + 3-plane position ids.
 """
-from repro.configs import ArchConfig, DENSE
+from repro.configs import ArchConfig
+from repro.configs import DENSE
 
 ARCH = ArchConfig(
     name="qwen2-vl-7b", family=DENSE,

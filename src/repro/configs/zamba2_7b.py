@@ -6,7 +6,9 @@
 DESIGN.md: the published model alternates two shared blocks with LoRA
 projectors; we implement one shared block every 6 layers.
 """
-from repro.configs import ArchConfig, HYBRID, SSMSpec
+from repro.configs import ArchConfig
+from repro.configs import HYBRID
+from repro.configs import SSMSpec
 
 ARCH = ArchConfig(
     name="zamba2-7b", family=HYBRID,

@@ -15,10 +15,17 @@ events); the scenario×policy matrix lives in :mod:`.matrix` and grows
 automatically with ``repro.dataflows.suite``'s registry.
 """
 
-from .compare import (CompareResult, Divergence, compare_scenario,
-                      first_divergence, golden_path, load_golden,
-                      run_matrix, save_golden)
-from .matrix import CONFORMANCE_POLICIES, SMOKE_SCENARIOS, matrix_entries
+from .compare import CompareResult
+from .compare import Divergence
+from .compare import compare_scenario
+from .compare import first_divergence
+from .compare import golden_path
+from .compare import load_golden
+from .compare import run_matrix
+from .compare import save_golden
+from .matrix import CONFORMANCE_POLICIES
+from .matrix import SMOKE_SCENARIOS
+from .matrix import matrix_entries
 
 __all__ = [
     "CompareResult", "Divergence", "compare_scenario", "first_divergence",

@@ -21,15 +21,23 @@ a bare ``assert digest == golden`` throws away.
 
 from __future__ import annotations
 
+from dataclasses import dataclass
+from dataclasses import field
 import json
-from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Dict
+from typing import Iterable
+from typing import List
+from typing import Optional
+from typing import Tuple
 
 import numpy as np
 
-from repro.core import EventSink, Simulator
-from repro.core.events import SCHEMA_VERSION, decode_event, stream_digest
+from repro.core import EventSink
+from repro.core import Simulator
+from repro.core.events import SCHEMA_VERSION
+from repro.core.events import decode_event
+from repro.core.events import stream_digest
 from repro.core.policies import named_policy
 
 #: default segment count the streaming check splits each trace into

@@ -19,7 +19,10 @@ mixes); the full matrix backs the frozen goldens.
 
 from __future__ import annotations
 
-from typing import Iterable, Iterator, Optional, Tuple
+from typing import Iterable
+from typing import Iterator
+from typing import Optional
+from typing import Tuple
 
 #: policy axis of the frozen golden matrix (ISSUE acceptance floor:
 #: lru, dbp, at+dbp) plus the gear-exercising composite

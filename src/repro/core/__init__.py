@@ -1,24 +1,55 @@
 """DCO core: TMU, shared-LLC policies, cycle-level simulator, analytical
 model, and the TPU-side cache orchestrator."""
 
-from .analytical import (ModelParams, Prediction, fit_params,
-                         gear_trajectory, kendall_tau, kept_fraction,
-                         predict, predict_batch, r_squared)
-from .cache import CacheGeometry, SharedLLC
-from .events import (COLUMNS as EVENT_COLUMNS, KIND_NAMES as EVENT_KINDS,
-                     SCHEMA_VERSION as EVENT_SCHEMA_VERSION, EventSink,
-                     canonical_order, decode_event, stream_digest,
-                     timeline_digest)
-from .orchestrator import CacheOrchestrator, OrchestrationPlan
-from .policies import PolicyConfig, named_policy
-from .simulator import (SimConfig, SimResult, Simulator, run_policies,
-                        run_policy)
-from .tmu import TMU, DeadFIFO, TMUParams, TensorMeta
-from .traces import (CompiledTrace, DataflowCounts, Step, Trace,
-                     build_fa2_trace, build_matmul_trace, fa2_counts)
-from .workloads import (PAPER_WORKLOADS, SPATIAL, TEMPORAL, AttnWorkload,
-                        DecodeWorkload, MoEWorkload, PrefixShareWorkload,
-                        SpecDecodeWorkload, SSDScanWorkload, get_workload)
+from .analytical import ModelParams
+from .analytical import Prediction
+from .analytical import fit_params
+from .analytical import gear_trajectory
+from .analytical import kendall_tau
+from .analytical import kept_fraction
+from .analytical import predict
+from .analytical import predict_batch
+from .analytical import r_squared
+from .cache import CacheGeometry
+from .cache import SharedLLC
+from .events import COLUMNS as EVENT_COLUMNS
+from .events import EventSink
+from .events import KIND_NAMES as EVENT_KINDS
+from .events import SCHEMA_VERSION as EVENT_SCHEMA_VERSION
+from .events import canonical_order
+from .events import decode_event
+from .events import stream_digest
+from .events import timeline_digest
+from .orchestrator import CacheOrchestrator
+from .orchestrator import OrchestrationPlan
+from .policies import PolicyConfig
+from .policies import named_policy
+from .simulator import SimConfig
+from .simulator import SimResult
+from .simulator import Simulator
+from .simulator import run_policies
+from .simulator import run_policy
+from .tmu import DeadFIFO
+from .tmu import TMU
+from .tmu import TMUParams
+from .tmu import TensorMeta
+from .traces import CompiledTrace
+from .traces import DataflowCounts
+from .traces import Step
+from .traces import Trace
+from .traces import build_fa2_trace
+from .traces import build_matmul_trace
+from .traces import fa2_counts
+from .workloads import AttnWorkload
+from .workloads import DecodeWorkload
+from .workloads import MoEWorkload
+from .workloads import PAPER_WORKLOADS
+from .workloads import PrefixShareWorkload
+from .workloads import SPATIAL
+from .workloads import SSDScanWorkload
+from .workloads import SpecDecodeWorkload
+from .workloads import TEMPORAL
+from .workloads import get_workload
 
 __all__ = [
     "ModelParams", "Prediction", "fit_params", "gear_trajectory",

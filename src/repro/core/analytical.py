@@ -51,10 +51,14 @@ Shared time structure (both engines):
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from itertools import product
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+import math
+from typing import Dict
+from typing import List
+from typing import Optional
+from typing import Sequence
+from typing import Tuple
 
 import numpy as np
 
@@ -1261,9 +1265,9 @@ def _fit_params_reference(points: Sequence[Tuple[DataflowCounts, int, str,
         if t2 >= t3:
             continue
         p = ModelParams(t1, t2, t3, lam)
-        l = loss(p)
-        if l < best_loss:
-            best, best_loss = p, l
+        cur = loss(p)
+        if cur < best_loss:
+            best, best_loss = p, cur
     # local refinement around the best point
     for _ in range(2):
         t1, t2, t3, lam = best.theta1, best.theta2, best.theta3, best.lam
@@ -1275,9 +1279,9 @@ def _fit_params_reference(points: Sequence[Tuple[DataflowCounts, int, str,
                 float(np.clip(lam + dl, 0.2, 2.0)))
             if p.theta2 >= p.theta3:
                 continue
-            l = loss(p)
-            if l < best_loss:
-                best, best_loss = p, l
+            cur = loss(p)
+            if cur < best_loss:
+                best, best_loss = p, cur
     return best
 
 

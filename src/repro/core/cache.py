@@ -16,13 +16,22 @@ slice's ``B_GEAR`` are not allocated.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict
+from typing import List
+from typing import Optional
+from typing import Tuple
 
 import numpy as np
 
-from .events import EV_BYPASS, EV_EVICT, EV_FILL, EV_HIT, EV_WB
-from .policies import (BYPASS_DYNAMIC, BYPASS_NONE, BYPASS_STATIC,
-                       GearController, PolicyConfig, make_controller)
+from .events import EV_BYPASS
+from .events import EV_EVICT
+from .events import EV_FILL
+from .events import EV_HIT
+from .events import EV_WB
+from .policies import BYPASS_NONE
+from .policies import GearController
+from .policies import PolicyConfig
+from .policies import make_controller
 from .tmu import TMU
 
 # Access outcome codes (returned per line).  The numeric values encode

@@ -26,11 +26,11 @@ split) and by ``repro.serve`` (KV page retirement).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict
+from typing import Tuple
 
 import numpy as np
 
-from .analytical import ModelParams
 from .tmu import TensorMeta
 
 

@@ -18,7 +18,8 @@ Named policies used throughout the paper's figures are exposed through
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
+from dataclasses import replace
 from typing import Optional
 
 import numpy as np

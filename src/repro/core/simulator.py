@@ -32,16 +32,27 @@ Execution engines:
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
-from typing import Dict, Iterable, List, Optional, Tuple, Union
+from dataclasses import dataclass
+from dataclasses import field
+from dataclasses import replace
+from typing import Dict
+from typing import Iterable
+from typing import List
+from typing import Optional
+from typing import Tuple
+from typing import Union
 
 import numpy as np
 
 from . import cache as C
-from .cache import CacheGeometry, SharedLLC
-from .events import EV_MSHR, EventSink
-from .policies import PolicyConfig, named_policy
-from .tmu import TMU, TMUParams, TensorMeta
+from .cache import CacheGeometry
+from .cache import SharedLLC
+from .events import EV_MSHR
+from .events import EventSink
+from .policies import PolicyConfig
+from .policies import named_policy
+from .tmu import TMU
+from .tmu import TMUParams
 from .traces import Trace
 
 
@@ -593,7 +604,7 @@ class Simulator:
                 else:
                     eligible = True
                 for (tid, tile), is_store in (
-                        [(l, False) for l in step.loads]
+                        [(ld, False) for ld in step.loads]
                         + [(s, True) for s in step.stores]):
                     meta = tensors[tid]
                     lines = trace.tile_lines(tid, tile)

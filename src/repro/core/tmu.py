@@ -26,9 +26,13 @@ Hardware cost defaults follow Table III: 8 tensor metadata entries,
 
 from __future__ import annotations
 
-from collections import OrderedDict, deque
-from dataclasses import dataclass, field
-from typing import Deque, Dict, Optional, Tuple
+from collections import OrderedDict
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque
+from typing import Dict
+from typing import Optional
+from typing import Tuple
 
 import numpy as np
 

@@ -33,8 +33,12 @@ Python step lists.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from dataclasses import field
+from typing import Dict
+from typing import List
+from typing import Optional
+from typing import Tuple
 
 import numpy as np
 
@@ -330,7 +334,7 @@ class CompiledTrace:
         t_nacc: List[int] = []
         flops_round = np.zeros(n_rounds, dtype=np.float64)
 
-        nonleader = [not l for l in trace.core_is_leader]
+        nonleader = [not ldr for ldr in trace.core_is_leader]
         for r in range(round_start, round_stop):
             rloc = r - round_start          # window-relative round index
             for c, steps in enumerate(trace.core_steps):
@@ -339,7 +343,7 @@ class CompiledTrace:
                 step = steps[r]
                 flops_round[rloc] += step.flops
                 for (tid, tile), is_store in (
-                        [(l, False) for l in step.loads]
+                        [(ld, False) for ld in step.loads]
                         + [(s, True) for s in step.stores]):
                     meta = tensors[tid]
                     start = meta.base_addr + tile * meta.tile_bytes

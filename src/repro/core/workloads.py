@@ -14,7 +14,8 @@ heads and KV heads."  Group allocation (paper Fig. 4, §VI-C):
 
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
+from dataclasses import replace
 from typing import Dict
 
 TEMPORAL = "temporal"

@@ -1,3 +1,4 @@
-from .synthetic import SyntheticLM, make_batch
+from .synthetic import SyntheticLM
+from .synthetic import make_batch
 
 __all__ = ["SyntheticLM", "make_batch"]

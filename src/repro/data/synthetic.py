@@ -13,7 +13,7 @@ than uniform noise, so the training loss has real signal to descend.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator, Optional, Tuple
+from typing import Iterator
 
 import numpy as np
 

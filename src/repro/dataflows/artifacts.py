@@ -34,13 +34,15 @@ disable the cache, ``REPRO_ARTIFACT_DIR`` to relocate it (default:
 
 from __future__ import annotations
 
+from dataclasses import fields
+from dataclasses import is_dataclass
 import hashlib
 import json
 import os
-import tempfile
-from dataclasses import fields, is_dataclass
 from pathlib import Path
-from typing import Dict, Optional
+import tempfile
+from typing import Dict
+from typing import Optional
 
 import numpy as np
 

@@ -33,9 +33,14 @@ plans the union tensor set.  What composition adds on top:
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict
+from typing import List
+from typing import Optional
+from typing import Sequence
 
-from .ir import DataflowSpec, StepSpec, TensorSpec
+from .ir import DataflowSpec
+from .ir import StepSpec
+from .ir import TensorSpec
 
 #: default tenant-region alignment: covers the dead-id tag granularity
 #: (num_sets · line_bytes · 2^D_LSB) for every geometry the suite sweeps
@@ -146,6 +151,10 @@ def compose_time_sliced(tenants: Sequence[DataflowSpec],
         tenant_region_align=region_align_bytes,
     )
     spec.validate()
+    # composite specs feed registries/replay directly (no SpecBuilder on
+    # this path), so run the same error-tier gate build() applies
+    from .verify import assert_clean
+    assert_clean(spec)
     return spec
 
 

@@ -11,11 +11,15 @@ wrappers over these specs.
 
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict
+from typing import List
+from typing import Tuple
 
-from repro.core.workloads import TEMPORAL, AttnWorkload
+from repro.core.workloads import AttnWorkload
+from repro.core.workloads import TEMPORAL
 
-from .ir import DataflowSpec, SpecBuilder
+from .ir import DataflowSpec
+from .ir import SpecBuilder
 
 
 def _kv_extent(wl: AttnWorkload, q_tile: int) -> int:
@@ -97,7 +101,12 @@ def _fa2_spatial_spec(wl: AttnWorkload, n_cores: int) -> DataflowSpec:
     b = SpecBuilder(f"{wl.name}-spatial", n_cores, workload=wl)
     gs = wl.group_size
     sharers = min(gs, n_cores)
-    n_acc = wl.n_q_tiles * sharers
+    # every group member reads each K/V tile once per Q tile; when the
+    # group is wider than the machine the extra members run in later
+    # waves on the same cores, so reads scale with gs, not sharers
+    # (declaring n_acc from sharers understated it 'gs/n_cores'-fold and
+    # retired tiles with readers remaining — caught by DCO101)
+    n_acc = wl.n_q_tiles * gs
     n_waves = (wl.n_q_heads + n_cores - 1) // n_cores
     b.set_groups(
         [c // gs if gs <= n_cores else 0 for c in range(n_cores)],

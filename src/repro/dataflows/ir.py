@@ -39,7 +39,11 @@ streamed it.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict
+from typing import List
+from typing import Optional
+from typing import Sequence
+from typing import Tuple
 
 from repro.core.workloads import AttnWorkload
 
@@ -146,50 +150,19 @@ class DataflowSpec:
     # ------------------------------------------------------------------
     def validate(self) -> None:
         """Structural well-formedness: unique names, resolvable references,
-        in-range tile indices, consistent core annotations."""
-        names = [t.name for t in self.tensors]
-        if len(set(names)) != len(names):
-            dup = sorted({n for n in names if names.count(n) > 1})
-            raise ValueError(f"{self.name}: duplicate tensor names {dup}")
-        if not (len(self.core_group) == len(self.core_is_leader)
-                == self.n_cores):
-            raise ValueError(f"{self.name}: core annotation length mismatch")
-        by = self._by_name()
-        for c, prog in enumerate(self.core_programs):
-            for r, step in enumerate(prog):
-                for tname, tile in (*step.loads, *step.stores):
-                    t = by.get(tname)
-                    if t is None:
-                        raise ValueError(
-                            f"{self.name}: core {c} round {r} references "
-                            f"unknown tensor {tname!r}")
-                    if not (0 <= tile < t.num_tiles):
-                        raise ValueError(
-                            f"{self.name}: core {c} round {r}: tile {tile} "
-                            f"out of range for {tname!r} "
-                            f"({t.num_tiles} tiles)")
-        if self.tenant_of_tensor is not None:
-            if self.tenant_names is None:
-                raise ValueError(f"{self.name}: tenant map without names")
-            n_t = len(self.tenant_names)
-            seen_tenants: List[int] = []
-            for t in self.tensors:
-                tid = self.tenant_of_tensor.get(t.name)
-                if tid is None or not (0 <= tid < n_t):
-                    raise ValueError(
-                        f"{self.name}: tensor {t.name!r} has no valid "
-                        f"tenant assignment")
-                if not seen_tenants or seen_tenants[-1] != tid:
-                    seen_tenants.append(tid)
-            if len(seen_tenants) != len(set(seen_tenants)):
-                # the shared allocator and the simulator's region map
-                # both model each tenant as ONE contiguous run of the
-                # declaration order; interleaved declarations would
-                # silently land tensors inside another tenant's region
-                raise ValueError(
-                    f"{self.name}: tenant declarations must be "
-                    f"contiguous (tenant-major tensor order), got run "
-                    f"sequence {seen_tenants}")
+        in-range tile indices, consistent core/tenant annotations.
+
+        The checks themselves live in the verifier's rule inventory
+        (``repro.dataflows.verify``, codes DCO001–DCO008) so the CLI,
+        the gates, and this fail-fast path agree on one rule set; this
+        raises on the first structural error, spec name included.
+        """
+        from .verify import structural_diagnostics
+        diags = structural_diagnostics(self)
+        if diags:
+            d = diags[0]
+            more = f" (+{len(diags) - 1} more)" if len(diags) > 1 else ""
+            raise ValueError(f"{d.format()}{more}")
 
     # ------------------------------------------------------------------
     def per_tensor_line_accesses(self) -> Dict[str, Tuple[int, int]]:
@@ -269,7 +242,16 @@ class SpecBuilder:
         self._core_group = list(core_group)
         self._core_is_leader = list(core_is_leader)
 
-    def build(self) -> DataflowSpec:
+    def build(self, verify: bool = True) -> DataflowSpec:
+        """Validate, gate, and freeze the spec.
+
+        Beyond the structural ``validate()``, every built spec passes
+        the verifier's error tier (annotation-vs-schedule consistency,
+        layout invariants — DESIGN.md §12) so no inconsistent spec
+        enters a registry or lowering; ``verify=False`` skips the gate
+        for callers that deliberately construct defective specs (the
+        injection harness goes through ``dataclasses.replace`` instead).
+        """
         spec = DataflowSpec(
             name=self.name, tensors=list(self._tensors),
             core_programs=[list(p) for p in self._programs],
@@ -277,4 +259,7 @@ class SpecBuilder:
             core_is_leader=list(self._core_is_leader),
             line_bytes=self.line_bytes, workload=self.workload)
         spec.validate()
+        if verify:
+            from .verify import assert_clean
+            assert_clean(spec)
         return spec

@@ -11,11 +11,15 @@ physical tensors.
 
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict
+from typing import List
 
-from repro.core.orchestrator import CacheOrchestrator, OrchestrationPlan
+from repro.core.orchestrator import CacheOrchestrator
+from repro.core.orchestrator import OrchestrationPlan
 from repro.core.tmu import TensorMeta
-from repro.core.traces import DataflowCounts, Step, Trace
+from repro.core.traces import DataflowCounts
+from repro.core.traces import Step
+from repro.core.traces import Trace
 
 from .ir import DataflowSpec
 

@@ -42,8 +42,12 @@ profile in milliseconds — cheap enough to thread through
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from dataclasses import field
+from typing import Dict
+from typing import List
+from typing import Optional
+from typing import Tuple
 
 import numpy as np
 
@@ -291,7 +295,7 @@ def lower_to_reuse_profile(spec: DataflowSpec) -> ReuseProfile:
             step = prog[r]
             flops_round[r] += step.flops
             for (tname, tile), is_store in (
-                    [(l, False) for l in step.loads]
+                    [(ld, False) for ld in step.loads]
                     + [(s, True) for s in step.stores]):
                 tid = tid_of[tname]
                 if is_bypass[tid]:

@@ -34,14 +34,21 @@ a capability the IR provides and a paper mechanism end to end:
 
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List
+from typing import Tuple
 
-from repro.core.workloads import (TEMPORAL, AttnWorkload, DecodeWorkload,
-                                  MoEWorkload, PrefixShareWorkload,
-                                  SpecDecodeWorkload, SSDScanWorkload)
+from repro.core.workloads import AttnWorkload
+from repro.core.workloads import DecodeWorkload
+from repro.core.workloads import MoEWorkload
+from repro.core.workloads import PrefixShareWorkload
+from repro.core.workloads import SSDScanWorkload
+from repro.core.workloads import SpecDecodeWorkload
+from repro.core.workloads import TEMPORAL
 
-from .fa2 import _kv_extent, emit_matmul_rounds
-from .ir import DataflowSpec, SpecBuilder
+from .fa2 import _kv_extent
+from .fa2 import emit_matmul_rounds
+from .ir import DataflowSpec
+from .ir import SpecBuilder
 
 
 # ---------------------------------------------------------------------------

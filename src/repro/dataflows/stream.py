@@ -45,13 +45,21 @@ Bit-identity rests on three invariants:
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict
+from typing import List
+from typing import Optional
+from typing import Sequence
+from typing import Tuple
 
 from repro.core.tmu import TensorMeta
-from repro.core.traces import CompiledTrace, Step, Trace
+from repro.core.traces import CompiledTrace
+from repro.core.traces import Step
+from repro.core.traces import Trace
 
-from .ir import LINE_BYTES, DataflowSpec, SpecBuilder
+from .ir import DataflowSpec
+from .ir import LINE_BYTES
+from .ir import SpecBuilder
 
 #: default flush budget: pre-merge line requests buffered per window
 DEFAULT_CHUNK_LINES = 1 << 18
@@ -180,6 +188,18 @@ class StreamEmitter:
                 epoch: Tuple[int, int] = (0, 0)) -> None:
         if name in self._live:
             raise ValueError(f"tensor {name!r} already live")
+        if size_bytes <= 0 or tile_bytes <= 0:
+            raise ValueError(
+                f"{self.name}: tensor {name!r} sizes must be positive "
+                f"(size={size_bytes}, tile={tile_bytes})")
+        if size_bytes % tile_bytes:
+            raise ValueError(
+                f"{self.name}: tensor {name!r} size {size_bytes} not a "
+                f"multiple of tile {tile_bytes}")
+        if tile_bytes % self.line_bytes:
+            raise ValueError(
+                f"{self.name}: tensor {name!r} tile {tile_bytes} not a "
+                f"multiple of line {self.line_bytes}")
         base = (self._addr_next + tile_bytes - 1) // tile_bytes * tile_bytes
         self._addr_next = base + size_bytes
         tid = self._next_tid

@@ -19,19 +19,31 @@ as before.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Tuple
+from typing import Callable
+from typing import Dict
+from typing import List
+from typing import Tuple
 
 from repro.core.simulator import SimConfig
-from repro.core.workloads import (AttnWorkload, DecodeWorkload, MoEWorkload,
-                                  PrefixShareWorkload, SpecDecodeWorkload,
-                                  SSDScanWorkload, get_workload)
+from repro.core.workloads import AttnWorkload
+from repro.core.workloads import DecodeWorkload
+from repro.core.workloads import MoEWorkload
+from repro.core.workloads import PrefixShareWorkload
+from repro.core.workloads import SSDScanWorkload
+from repro.core.workloads import SpecDecodeWorkload
+from repro.core.workloads import get_workload
 
 from .compose import compose_time_sliced
-from .fa2 import fa2_spec, matmul_spec
+from .fa2 import fa2_spec
+from .fa2 import matmul_spec
 from .ir import DataflowSpec
-from .scenarios import (decode_paged_spec, mlp_chain_spec, moe_ffn_spec,
-                        prefix_share_spec, spec_decode_spec,
-                        ssd_scan_spec, transformer_layer_spec)
+from .scenarios import decode_paged_spec
+from .scenarios import mlp_chain_spec
+from .scenarios import moe_ffn_spec
+from .scenarios import prefix_share_spec
+from .scenarios import spec_decode_spec
+from .scenarios import ssd_scan_spec
+from .scenarios import transformer_layer_spec
 
 MB = 2 ** 20
 
@@ -233,18 +245,33 @@ def registry_keys() -> List[str]:
     return list(_REGISTRY)
 
 
+def _gated(case: SuiteCase) -> SuiteCase:
+    """Registry gate: no case leaves the registry carrying error-tier
+    diagnostics (DESIGN.md §12).  Runs against the case's own sim
+    config so the layout rules see the geometry the case simulates."""
+    from .verify import assert_clean
+    assert_clean(case.spec, sim_cfg=case.cfg)
+    return case
+
+
 def build_suite(full: bool = False, n_cores: int = 16) -> List[SuiteCase]:
     """Instantiate the whole suite (reduced grid by default, paper-scale
     shapes with ``full=True``)."""
-    return [build(full, n_cores) for build in _REGISTRY.values()]
+    return [_gated(build(full, n_cores)) for build in _REGISTRY.values()]
 
 
 def suite_case(key: str, full: bool = False,
-               n_cores: int = 16) -> SuiteCase:
+               n_cores: int = 16, *, gate: bool = True) -> SuiteCase:
     """Build exactly one registered case (lazy: no other spec is
-    constructed — the CI smoke path)."""
+    constructed — the CI smoke path).
+
+    ``gate=False`` skips the error-tier verification gate — for the lint
+    CLI, which wants the full diagnostic list rather than the first
+    error as an exception.
+    """
     build = _REGISTRY.get(key)
     if build is None:
         raise KeyError(f"unknown suite scenario {key!r}; have "
                        f"{list(_REGISTRY)}")
-    return build(full, n_cores)
+    case = build(full, n_cores)
+    return _gated(case) if gate else case

@@ -6,9 +6,13 @@ validated in interpret mode on CPU (tests/) and activate on real TPU via
 the ``use_pallas`` flag in the serve/train configs.
 """
 
-from .decode_attention import decode_attention, decode_attention_ref
-from .flash_attention import attention_ref, flash_attention
-from .ssd_scan import ssd_ref, ssd_scan, ssd_sequential_ref
+from .decode_attention import decode_attention
+from .decode_attention import decode_attention_ref
+from .flash_attention import attention_ref
+from .flash_attention import flash_attention
+from .ssd_scan import ssd_ref
+from .ssd_scan import ssd_scan
+from .ssd_scan import ssd_sequential_ref
 
 __all__ = ["decode_attention", "decode_attention_ref", "attention_ref",
            "flash_attention", "ssd_ref", "ssd_scan", "ssd_sequential_ref"]

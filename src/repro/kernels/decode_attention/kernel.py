@@ -18,9 +18,9 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+import jax.numpy as jnp
 
 NEG_INF = -1e30
 
@@ -60,8 +60,8 @@ def decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 
     @pl.when(j == n_kv - 1)
     def _finalize():
-        l = jnp.maximum(l_ref[:, 0], 1e-30)
-        o_ref[0, ...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        l_sum = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / l_sum[:, None]).astype(o_ref.dtype)
 
 
 def build_decode_call(*, bg: int, group: int, seq_k: int, head_dim: int,

@@ -25,12 +25,11 @@ multiple of 128 by ``ops.flash_attention`` when needed.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+import jax.numpy as jnp
 
 NEG_INF = -1e30
 
@@ -71,7 +70,7 @@ def flash_kernel(q_ref, kp_ref, vp_ref, ks_ref, vs_ref, o_ref,
     @pl.when(j == 0)
     def _init():
         m = jnp.full((block_q, 1), NEG_INF, jnp.float32)
-        l = jnp.zeros((block_q, 1), jnp.float32)
+        l_i = jnp.zeros((block_q, 1), jnp.float32)
         acc = jnp.zeros_like(acc_ref)
         q = q_ref[0].astype(jnp.float32)
 
@@ -90,9 +89,9 @@ def flash_kernel(q_ref, kp_ref, vp_ref, ks_ref, vs_ref, o_ref,
                     block_q=block_q, block_k=block_k)
                 return m2[:, None], l2[:, None], a2
 
-            m, l, acc = jax.lax.fori_loop(0, n_pin, body, (m, l, acc))
+            m, l_i, acc = jax.lax.fori_loop(0, n_pin, body, (m, l_i, acc))
         m_ref[...] = m
-        l_ref[...] = l
+        l_ref[...] = l_i
         acc_ref[...] = acc
 
     # ---- streamed remainder (re-fetched per Q block: bypass class) ----
@@ -118,8 +117,8 @@ def flash_kernel(q_ref, kp_ref, vp_ref, ks_ref, vs_ref, o_ref,
 
     @pl.when(j == max(n_stream - 1, 0))
     def _finalize():
-        l = jnp.maximum(l_ref[:, 0], 1e-30)
-        o_ref[0, ...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        l_sum = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / l_sum[:, None]).astype(o_ref.dtype)
 
 
 def build_flash_call(*, bh: int, n_heads: int, n_kv_heads: int,

@@ -1,4 +1,5 @@
 from .ops import ssd_scan
-from .ref import ssd_ref, ssd_sequential_ref
+from .ref import ssd_ref
+from .ref import ssd_sequential_ref
 
 __all__ = ["ssd_scan", "ssd_ref", "ssd_sequential_ref"]

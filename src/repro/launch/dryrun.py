@@ -5,27 +5,35 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # The two lines above MUST run before any other import (jax locks the
 # device count at first init).  See DESIGN.md §9 / EXPERIMENTS.md §Dry-run.
 
-import argparse          # noqa: E402
-import json              # noqa: E402
-import time              # noqa: E402
-import traceback         # noqa: E402
-from functools import partial  # noqa: E402
+import argparse
+from functools import partial
+import json
+import time
+import traceback
 
-import jax               # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
-from repro.configs import (ARCH_NAMES, SHAPES, cell_applicable,  # noqa: E402
-                           get_arch)
-from repro.launch import roofline as rl                          # noqa: E402
-from repro.launch.mesh import make_production_mesh               # noqa: E402
-from repro.models import (cache_logical_axes, decode_step,       # noqa: E402
-                          init_cache, init_params, prefill)
-from repro.models.model import forward, lm_loss                  # noqa: E402
-from repro.sharding import logical_spec, use_mesh                # noqa: E402
-from repro.train import (AdamWConfig, init_train_state,          # noqa: E402
-                         make_train_step, opt_logical_axes,
-                         param_logical_axes)
+from repro.configs import ARCH_NAMES
+from repro.configs import SHAPES
+from repro.configs import cell_applicable
+from repro.configs import get_arch
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models import cache_logical_axes
+from repro.models import decode_step
+from repro.models import init_cache
+from repro.models import init_params
+from repro.models import prefill
+from repro.sharding import logical_spec
+from repro.sharding import use_mesh
+from repro.train import AdamWConfig
+from repro.train import init_train_state
+from repro.train import make_train_step
+from repro.train import opt_logical_axes
+from repro.train import param_logical_axes
 
 
 def shardings_for(axes_tree, struct_tree, mesh):

@@ -17,10 +17,12 @@ collective-permute ops.
 
 from __future__ import annotations
 
+from dataclasses import asdict
+from dataclasses import dataclass
 import json
 import re
-from dataclasses import asdict, dataclass
-from typing import Dict, Optional
+from typing import Dict
+from typing import Optional
 
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes/s / chip
@@ -157,7 +159,6 @@ def collective_bytes(hlo_text: str,
                 r"while\(.*?\).*?body=\s*%?([\w.\-]+)", body):
             whiles.append((cname, m.group(1)))
     body_parents = {b: p for p, b in whiles}
-    body_names = set(body_parents)
 
     def depth_chain(comp: str) -> int:
         d = 0

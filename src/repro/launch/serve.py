@@ -13,9 +13,11 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import get_arch, reduce_for_smoke
+from repro.configs import get_arch
+from repro.configs import reduce_for_smoke
 from repro.models import init_params
-from repro.serve import Request, ServeEngine
+from repro.serve import Request
+from repro.serve import ServeEngine
 
 
 def main() -> None:

@@ -21,11 +21,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
-from repro.configs import get_arch, reduce_for_smoke
+from repro.configs import get_arch
+from repro.configs import reduce_for_smoke
 from repro.data import SyntheticLM
 from repro.models import init_params
-from repro.train import (AdamWConfig, StepTimer, StepWatchdog,
-                         init_train_state, make_train_step)
+from repro.train import AdamWConfig
+from repro.train import StepTimer
+from repro.train import StepWatchdog
+from repro.train import init_train_state
+from repro.train import make_train_step
 
 
 def main() -> None:

@@ -1,8 +1,15 @@
 """Model zoo: pure-functional JAX implementations of the 10 assigned
 architectures (dense GQA / MoE / Mamba2-SSD / hybrid)."""
 
-from .model import (Cache, cache_logical_axes, decode_step, forward,
-                    init_cache, init_params, lm_loss, local_flags, prefill)
+from .model import Cache
+from .model import cache_logical_axes
+from .model import decode_step
+from .model import forward
+from .model import init_cache
+from .model import init_params
+from .model import lm_loss
+from .model import local_flags
+from .model import prefill
 
 __all__ = ["Cache", "cache_logical_axes", "decode_step", "forward",
            "init_cache", "init_params", "lm_loss", "local_flags", "prefill"]

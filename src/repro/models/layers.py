@@ -9,15 +9,18 @@ single CPU device (smoke tests) and on the production mesh (dry-run).
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Optional
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.sharding import act_axes, constrain, current_mesh
-from repro.sharding.api import ACT_SEQ, logical_spec
+from repro.sharding import act_axes
+from repro.sharding import constrain
+from repro.sharding import current_mesh
+from repro.sharding.api import ACT_SEQ
 
 
 def row_parallel_out(y: jnp.ndarray, w: jnp.ndarray) -> Optional[jnp.ndarray]:

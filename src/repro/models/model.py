@@ -21,18 +21,32 @@ from __future__ import annotations
 
 import math
 import os
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any
+from typing import Dict
+from typing import NamedTuple
+from typing import Optional
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs import DENSE, HYBRID, MOE, SSM, ArchConfig
-from repro.sharding import act_axes, constrain
+from repro.configs import ArchConfig
+from repro.configs import DENSE
+from repro.configs import HYBRID
+from repro.configs import MOE
+from repro.configs import SSM
+from repro.sharding import act_axes
+from repro.sharding import constrain
 
-from .layers import attention_block, mlp_block, rms_norm
-from .moe import init_moe_params, moe_ffn
-from .ssm import Mamba2Cache, init_mamba2_cache, init_mamba2_params, \
-    mamba2_block
+from .layers import attention_block
+from .layers import mlp_block
+from .layers import rms_norm
+from .moe import init_moe_params
+from .moe import moe_ffn
+from .ssm import Mamba2Cache
+from .ssm import init_mamba2_cache
+from .ssm import init_mamba2_params
+from .ssm import mamba2_block
 
 DTYPE = jnp.bfloat16
 
@@ -485,7 +499,6 @@ def prefill(params, tokens, cfg: ArchConfig, *,
     """Returns (last-token logits (B, V), cache filled to S)."""
     b, s = tokens.shape
     x = embed_tokens(params, tokens, cfg, input_embeds)
-    zero = jnp.zeros((), jnp.int32)
 
     if cfg.family == DENSE:
         ck, cv = _proto_kv(cfg, cfg.n_layers, b, s)
@@ -500,11 +513,13 @@ def prefill(params, tokens, cfg: ArchConfig, *,
             x, nk, nv = _dense_prefill(params["dense_layers"], x, cfg,
                                        positions, ck, cv,
                                        local_flags(cfg, nd))
-            ks.append(nk); vs.append(nv)
+            ks.append(nk)
+            vs.append(nv)
         ck, cv = _proto_kv(cfg, cfg.n_layers - nd, b, s)
         x, nk, nv = _moe_prefill(params["moe_layers"], x, cfg, positions,
                                  ck, cv)
-        ks.append(nk); vs.append(nv)
+        ks.append(nk)
+        vs.append(nv)
         cache = Cache(k=jnp.concatenate(ks), v=jnp.concatenate(vs),
                       pos=jnp.asarray(s, jnp.int32))
     elif cfg.family == SSM:

@@ -22,7 +22,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.sharding import current_mesh, logical_spec
+from repro.sharding import current_mesh
+from repro.sharding import logical_spec
 
 from .layers import rms_norm
 

@@ -11,13 +11,18 @@ B/C (B, S, G, N) with H % G == 0.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple
+from typing import Optional
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .layers import rms_norm, row_parallel_out
-from repro.sharding import act_axes, constrain
+from repro.sharding import act_axes
+from repro.sharding import constrain
+
+from .layers import rms_norm
+from .layers import row_parallel_out
 
 
 def segsum(x: jnp.ndarray) -> jnp.ndarray:

@@ -7,7 +7,8 @@ resolved lazily (PEP 562): the traffic-scale replay modules
 importable from suite/conformance worker processes that never touch JAX.
 """
 
-from .scheduler import ServeTruncation, SlotScheduler
+from .scheduler import ServeTruncation
+from .scheduler import SlotScheduler
 
 __all__ = ["Request", "ServeEngine", "ServeTruncation", "SlotScheduler"]
 

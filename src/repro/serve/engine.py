@@ -15,18 +15,26 @@ whole loop jit-compiles to a single ``decode_step`` of static shape.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from dataclasses import field
+from typing import Dict
+from typing import List
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ArchConfig
-from repro.core.tmu import TMU, TensorMeta
-from repro.models import Cache, decode_step, init_cache, prefill
+from repro.core.tmu import TMU
+from repro.core.tmu import TensorMeta
+from repro.models import Cache
+from repro.models import decode_step
+from repro.models import init_cache
+from repro.models import prefill
 
-from .scheduler import ServeTruncation, SlotScheduler
+from .scheduler import ServeTruncation
+from .scheduler import SlotScheduler
 
 
 @dataclass

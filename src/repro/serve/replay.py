@@ -24,18 +24,28 @@ p50/p95/p99 milliseconds.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, Iterator, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict
+from typing import Iterator
+from typing import List
+from typing import Optional
 
 import numpy as np
 
-from repro.core.policies import PolicyConfig, named_policy
-from repro.core.simulator import SimConfig, SimResult, Simulator
-from repro.dataflows.stream import (DEFAULT_CHUNK_LINES, ReplaySegment,
-                                    SpecEmitter, StreamEmitter)
+from repro.core.policies import named_policy
+from repro.core.simulator import SimConfig
+from repro.core.simulator import SimResult
+from repro.core.simulator import Simulator
+from repro.dataflows.stream import DEFAULT_CHUNK_LINES
+from repro.dataflows.stream import ReplaySegment
+from repro.dataflows.stream import SpecEmitter
+from repro.dataflows.stream import StreamEmitter
 
-from .scheduler import ServeTruncation, SlotScheduler
-from .traffic import ReplayRequest, RequestStream, TrafficConfig
+from .scheduler import ServeTruncation
+from .scheduler import SlotScheduler
+from .traffic import ReplayRequest
+from .traffic import RequestStream
+from .traffic import TrafficConfig
 
 
 @dataclass(frozen=True)
@@ -223,6 +233,8 @@ class ReplayResult:
     segments: int = 0
     peak_seen_lines: int = 0
     total_lines_declared: int = 0
+    #: online verifier verdict (``run_replay(verify=True)``), else None
+    diagnostics: Optional[object] = None
 
 
 def slo_metrics(log: ReplayLog,
@@ -286,13 +298,23 @@ def run_replay(traffic: TrafficConfig, policy,
                mode: str = "stream",
                chunk_lines: int = DEFAULT_CHUNK_LINES,
                record_history: bool = True,
-               events=None) -> ReplayResult:
+               events=None, verify: bool = False) -> ReplayResult:
     """Run one replay under one policy.
 
     ``mode="stream"`` (default) is the bounded-memory path: generator →
     StreamEmitter windows → ``Simulator.run_stream``.  ``mode=
     "monolithic"`` materializes the whole spec/trace first (reference
     path; small seeds only — every tensor is TMU-registered up front).
+
+    ``verify=True`` turns on the online verifier (DESIGN.md §12): in
+    stream mode a :class:`~repro.dataflows.verify.StreamVerifier` audits
+    every flushed segment in-line (bounded memory, same pass as the
+    simulator); in monolithic mode the built spec goes through
+    :func:`~repro.dataflows.verify.verify_spec`.  The resulting
+    :class:`~repro.dataflows.verify.VerifyResult` lands on
+    ``ReplayResult.diagnostics``; error-tier findings raise
+    :class:`~repro.dataflows.verify.SpecVerifyError` before results are
+    returned (a corrupt emission must not masquerade as a measurement).
     """
     cfg = sim_cfg or SimConfig()
     rcfg = rcfg or ReplayConfig(n_cores=cfg.n_cores,
@@ -303,12 +325,28 @@ def run_replay(traffic: TrafficConfig, policy,
     eng = ReplayEngine(RequestStream(traffic), rcfg)
     name = _replay_name(traffic)
     sim = Simulator(cfg, pol)
+    diags = None
     if mode == "stream":
         emitter = StreamEmitter(name, rcfg.n_cores,
                                 chunk_lines=chunk_lines,
                                 line_bytes=rcfg.line_bytes)
-        res = sim.run_stream(eng.drive(emitter), name=name,
+        segs = eng.drive(emitter)
+        verifier = None
+        if verify:
+            from repro.dataflows.verify import StreamVerifier
+            verifier = StreamVerifier(name, line_bytes=rcfg.line_bytes,
+                                      sim_cfg=cfg)
+
+            def audited(source=segs, v=verifier):
+                for seg in source:
+                    v.on_segment(seg)
+                    yield seg
+
+            segs = audited()
+        res = sim.run_stream(segs, name=name,
                              record_history=record_history, events=events)
+        if verifier is not None:
+            diags = verifier.finish()
         segments = emitter.segments
         peak = emitter.peak_seen_lines
         total = emitter.total_lines_declared
@@ -318,14 +356,22 @@ def run_replay(traffic: TrafficConfig, policy,
                               line_bytes=rcfg.line_bytes)
         for _ in eng.drive(emitter):
             pass
-        trace = lower_to_trace(emitter.build())
+        spec = emitter.build()
+        if verify:
+            from repro.dataflows.verify import verify_spec
+            diags = verify_spec(spec, sim_cfg=cfg)
+        trace = lower_to_trace(spec)
         res = sim.run(trace, record_history=record_history, events=events)
         segments = 1
         peak = total = sum(m.size_bytes // rcfg.line_bytes
                            for m in trace.tensors.values())
     else:
         raise ValueError(f"unknown mode {mode!r}")
+    if diags is not None and diags.has_errors:
+        from repro.dataflows.verify import SpecVerifyError
+        raise SpecVerifyError(diags)
     return ReplayResult(sim=res, log=eng.log,
                         slo=slo_metrics(eng.log, res),
                         rounds=eng.rounds, segments=segments,
-                        peak_seen_lines=peak, total_lines_declared=total)
+                        peak_seen_lines=peak, total_lines_declared=total,
+                        diagnostics=diags)

@@ -11,7 +11,11 @@ caches or tokens.
 
 from __future__ import annotations
 
-from typing import Generic, List, Optional, Tuple, TypeVar
+from typing import Generic
+from typing import List
+from typing import Optional
+from typing import Tuple
+from typing import TypeVar
 
 T = TypeVar("T")
 

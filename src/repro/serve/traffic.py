@@ -24,7 +24,9 @@ the bit-identity property) see identical requests.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Tuple
+from typing import Dict
+from typing import Iterator
+from typing import Tuple
 
 import numpy as np
 

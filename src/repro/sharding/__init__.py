@@ -6,8 +6,14 @@ hints into ``with_sharding_constraint`` calls.  Without a bound mesh every
 hint is a no-op, so smoke tests run unchanged on one CPU device.
 """
 
-from .api import (ACT_SEQ, LOGICAL_RULES, act_axes, constrain,
-                  current_mesh, logical_spec, named_sharding, use_mesh)
+from .api import ACT_SEQ
+from .api import LOGICAL_RULES
+from .api import act_axes
+from .api import constrain
+from .api import current_mesh
+from .api import logical_spec
+from .api import named_sharding
+from .api import use_mesh
 
 __all__ = ["ACT_SEQ", "LOGICAL_RULES", "act_axes", "constrain",
            "current_mesh", "logical_spec", "named_sharding", "use_mesh"]

@@ -1,11 +1,16 @@
 from __future__ import annotations
 
-import threading
 from contextlib import contextmanager
-from typing import Optional, Sequence, Tuple, Union
+import threading
+from typing import Optional
+from typing import Sequence
+from typing import Tuple
+from typing import Union
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 # logical axis → tuple of mesh axes (filtered by what the mesh provides)
 LOGICAL_RULES = {

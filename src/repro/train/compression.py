@@ -19,7 +19,8 @@ Wire protocol per tensor:
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Tuple
+from typing import Any
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

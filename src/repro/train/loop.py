@@ -3,17 +3,26 @@ moments, remat), step watchdog for straggler mitigation."""
 
 from __future__ import annotations
 
+from dataclasses import dataclass
+from dataclasses import field
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
+from typing import Any
+from typing import Callable
+from typing import List
+from typing import NamedTuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import ArchConfig
-from repro.models import forward, lm_loss
+from repro.models import forward
+from repro.models import lm_loss
 
-from .optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+from .optimizer import AdamWConfig
+from .optimizer import OptState
+from .optimizer import adamw_update
+from .optimizer import init_opt_state
 
 
 class TrainState(NamedTuple):

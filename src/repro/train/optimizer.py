@@ -8,7 +8,9 @@ state never replicates across the data axis.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, NamedTuple, Tuple
+from typing import Any
+from typing import NamedTuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +36,8 @@ class OptState(NamedTuple):
 
 
 def init_opt_state(params) -> OptState:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return OptState(m=jax.tree.map(zeros, params),
                     v=jax.tree.map(zeros, params),
                     step=jnp.zeros((), jnp.int32))

@@ -8,11 +8,16 @@ them to PartitionSpecs for a concrete mesh.
 
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any
+from typing import Tuple
 
 import jax
 
-from repro.configs import DENSE, HYBRID, MOE, SSM, ArchConfig
+from repro.configs import ArchConfig
+from repro.configs import DENSE
+from repro.configs import HYBRID
+from repro.configs import MOE
+from repro.configs import SSM
 
 
 def _attn_axes(stacked: bool, qk_norm: bool):

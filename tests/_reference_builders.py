@@ -11,11 +11,17 @@ from it is the signal the equivalence tests exist to catch.
 
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict
+from typing import List
+from typing import Tuple
 
 from repro.core.tmu import TensorMeta
-from repro.core.traces import LINE_BYTES, DataflowCounts, Step, Trace
-from repro.core.workloads import TEMPORAL, AttnWorkload
+from repro.core.traces import DataflowCounts
+from repro.core.traces import LINE_BYTES
+from repro.core.traces import Step
+from repro.core.traces import Trace
+from repro.core.workloads import AttnWorkload
+from repro.core.workloads import TEMPORAL
 
 
 class _Allocator:

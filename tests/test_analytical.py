@@ -3,11 +3,20 @@
 import numpy as np
 import pytest
 
-from repro.core import (SimConfig, build_fa2_trace, fa2_counts, fit_params,
-                        kendall_tau, kept_fraction, named_policy, predict,
-                        r_squared, run_policy)
+from repro.core import SimConfig
+from repro.core import build_fa2_trace
+from repro.core import fa2_counts
+from repro.core import fit_params
+from repro.core import kendall_tau
+from repro.core import kept_fraction
+from repro.core import named_policy
+from repro.core import predict
+from repro.core import r_squared
+from repro.core import run_policy
 from repro.core.analytical import ModelParams
-from repro.core.workloads import SPATIAL, TEMPORAL, AttnWorkload
+from repro.core.workloads import AttnWorkload
+from repro.core.workloads import SPATIAL
+from repro.core.workloads import TEMPORAL
 
 WL = AttnWorkload("tiny-t", n_q_heads=8, n_kv_heads=4, head_dim=128,
                   seq_len=1024, group_alloc=TEMPORAL)
@@ -143,8 +152,8 @@ def test_model_validates_against_simulator():
                 pts.append((counts, llc, pol, "optimal", gqa,
                             counts.n_rounds, res.cycles))
     params = fit_params(pts, hw)
-    pred = np.array([predict(c, l, p, hw, params, v, g, n_rounds=r).cycles
-                     for (c, l, p, v, g, r, _) in pts])
+    pred = np.array([predict(c, sz, p, hw, params, v, g, n_rounds=r).cycles
+                     for (c, sz, p, v, g, r, _) in pts])
     target = np.array([t for *_, t in pts])
     r2 = r_squared(pred, target)
     tau = kendall_tau(pred, target)

@@ -7,15 +7,22 @@ import subprocess
 import sys
 
 import numpy as np
-import pytest
 
-from repro.core import SimConfig, named_policy, run_policy
-from repro.core.workloads import AttnWorkload, TEMPORAL
-from repro.dataflows import (artifacts_enabled, fa2_spec, lower_to_counts,
-                             lower_to_trace, matmul_spec, registry_keys,
-                             spec_fingerprint, suite_case,
-                             try_spec_fingerprint)
+from repro.core import SimConfig
+from repro.core import named_policy
+from repro.core import run_policy
+from repro.core.workloads import AttnWorkload
+from repro.core.workloads import TEMPORAL
 from repro.dataflows import artifacts
+from repro.dataflows import artifacts_enabled
+from repro.dataflows import fa2_spec
+from repro.dataflows import lower_to_counts
+from repro.dataflows import lower_to_trace
+from repro.dataflows import matmul_spec
+from repro.dataflows import registry_keys
+from repro.dataflows import spec_fingerprint
+from repro.dataflows import suite_case
+from repro.dataflows import try_spec_fingerprint
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

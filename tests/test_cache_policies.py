@@ -4,13 +4,20 @@ import numpy as np
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings
+from hypothesis import given
+from hypothesis import settings
 from hypothesis import strategies as st
 
-from repro.core.cache import (BYPASSED_COLD, COLD_MISS, CONFLICT_MISS, HIT,
-                              CacheGeometry, SharedLLC)
-from repro.core.policies import named_policy, with_gear
-from repro.core.tmu import TMU, TMUParams, TensorMeta
+from repro.core.cache import BYPASSED_COLD
+from repro.core.cache import COLD_MISS
+from repro.core.cache import CONFLICT_MISS
+from repro.core.cache import CacheGeometry
+from repro.core.cache import HIT
+from repro.core.cache import SharedLLC
+from repro.core.policies import named_policy
+from repro.core.tmu import TMU
+from repro.core.tmu import TMUParams
+from repro.core.tmu import TensorMeta
 
 GEOM = CacheGeometry(64 * 1024, line_bytes=128, assoc=4, n_slices=4)
 
@@ -57,7 +64,6 @@ def test_force_bypass_never_allocates():
 def test_lru_evicts_oldest():
     geom = CacheGeometry(4 * 128 * 2, 128, 4, 1)   # 2 sets, 4 ways
     llc = SharedLLC(geom, named_policy("lru"))
-    ns = geom.num_sets
     # 5 lines mapping to the same set → evicts the first
     lines = [geom_line_for_set(geom, 0, k) for k in range(5)]
     for ln in lines:

@@ -6,14 +6,26 @@ simulator/cache fixes that rode along (MSHR write-intent merge, scalar
 import numpy as np
 import pytest
 
-from repro.core import (SimConfig, SimResult, Simulator, Trace,
-                        build_fa2_trace, build_matmul_trace, named_policy,
-                        run_policies, run_policy)
-from repro.core.cache import COLD_MISS, CONFLICT_MISS, CacheGeometry, \
-    SharedLLC
-from repro.core.tmu import TMU, TMUParams, TensorMeta
+from repro.core import SimConfig
+from repro.core import SimResult
+from repro.core import Simulator
+from repro.core import Trace
+from repro.core import build_fa2_trace
+from repro.core import build_matmul_trace
+from repro.core import named_policy
+from repro.core import run_policies
+from repro.core import run_policy
+from repro.core.cache import COLD_MISS
+from repro.core.cache import CONFLICT_MISS
+from repro.core.cache import CacheGeometry
+from repro.core.cache import SharedLLC
+from repro.core.tmu import TMU
+from repro.core.tmu import TMUParams
+from repro.core.tmu import TensorMeta
 from repro.core.traces import Step
-from repro.core.workloads import SPATIAL, TEMPORAL, AttnWorkload
+from repro.core.workloads import AttnWorkload
+from repro.core.workloads import SPATIAL
+from repro.core.workloads import TEMPORAL
 
 TINY_TEMPORAL = AttnWorkload("tiny-t", n_q_heads=8, n_kv_heads=4,
                              head_dim=128, seq_len=1024,

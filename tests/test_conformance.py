@@ -7,18 +7,24 @@ registry, and one end-to-end cell through scripts/conformance.py.
 """
 
 import json
+from pathlib import Path
 import subprocess
 import sys
-from pathlib import Path
 
-import numpy as np
 import pytest
 
-from repro.conformance import (CONFORMANCE_POLICIES, SMOKE_SCENARIOS,
-                               compare_scenario, first_divergence,
-                               load_golden, matrix_entries, save_golden)
-from repro.core import EventSink, SimConfig, Simulator, named_policy
-from repro.core.events import SCHEMA_VERSION, decode_event
+from repro.conformance import CONFORMANCE_POLICIES
+from repro.conformance import SMOKE_SCENARIOS
+from repro.conformance import compare_scenario
+from repro.conformance import first_divergence
+from repro.conformance import load_golden
+from repro.conformance import matrix_entries
+from repro.conformance import save_golden
+from repro.core import EventSink
+from repro.core import SimConfig
+from repro.core import Simulator
+from repro.core import named_policy
+from repro.core.events import SCHEMA_VERSION
 from repro.core.traces import build_matmul_trace
 
 REPO = Path(__file__).resolve().parents[1]

@@ -2,21 +2,41 @@
 counts/trace consistency, the four new scenarios through both engines and
 the analytical model, plan lowering, and the suite registry."""
 
+from _reference_builders import build_fa2_trace_ref
+from _reference_builders import build_matmul_trace_ref
+from _reference_builders import fa2_counts_ref
 import numpy as np
 import pytest
 
-from _reference_builders import (build_fa2_trace_ref, build_matmul_trace_ref,
-                                 fa2_counts_ref)
-from repro.core import (DecodeWorkload, MoEWorkload, SimConfig,
-                        SpecDecodeWorkload, build_fa2_trace,
-                        build_matmul_trace, fa2_counts, named_policy,
-                        predict, run_policies, run_policy)
-from repro.core.workloads import SPATIAL, TEMPORAL, AttnWorkload, get_workload
-from repro.dataflows import (SUITE_POLICIES, build_suite, decode_paged_spec,
-                             fa2_spec, lower_to_counts, lower_to_plan,
-                             lower_to_trace, matmul_spec, mlp_chain_spec,
-                             moe_ffn_spec, spec_decode_spec, suite_case,
-                             tmu_metadata, transformer_layer_spec)
+from repro.core import DecodeWorkload
+from repro.core import MoEWorkload
+from repro.core import SimConfig
+from repro.core import SpecDecodeWorkload
+from repro.core import build_fa2_trace
+from repro.core import build_matmul_trace
+from repro.core import fa2_counts
+from repro.core import named_policy
+from repro.core import predict
+from repro.core import run_policies
+from repro.core import run_policy
+from repro.core.workloads import AttnWorkload
+from repro.core.workloads import SPATIAL
+from repro.core.workloads import TEMPORAL
+from repro.core.workloads import get_workload
+from repro.dataflows import SUITE_POLICIES
+from repro.dataflows import build_suite
+from repro.dataflows import decode_paged_spec
+from repro.dataflows import fa2_spec
+from repro.dataflows import lower_to_counts
+from repro.dataflows import lower_to_plan
+from repro.dataflows import lower_to_trace
+from repro.dataflows import matmul_spec
+from repro.dataflows import mlp_chain_spec
+from repro.dataflows import moe_ffn_spec
+from repro.dataflows import spec_decode_spec
+from repro.dataflows import suite_case
+from repro.dataflows import tmu_metadata
+from repro.dataflows import transformer_layer_spec
 from repro.dataflows.ir import SpecBuilder
 
 TINY_T = AttnWorkload("tiny-t", 8, 4, 128, 1024, group_alloc=TEMPORAL)

@@ -9,15 +9,31 @@ zero emission when disabled, timeline series/digests, and the
 import numpy as np
 import pytest
 
-from repro.core import (EventSink, SimConfig, Simulator, named_policy,
-                        run_policy, timeline_digest)
+from repro.core import EventSink
+from repro.core import SimConfig
+from repro.core import Simulator
+from repro.core import named_policy
+from repro.core import run_policy
+from repro.core import timeline_digest
 from repro.core.cache import CacheGeometry
-from repro.core.events import (COLUMNS, EV_BYPASS, EV_EVICT, EV_FILL,
-                               EV_GEAR, EV_HIT, EV_MSHR, EV_RETIRE, EV_WB,
-                               SCHEMA_VERSION, canonical_order,
-                               decode_event, stream_digest)
-from repro.core.traces import build_fa2_trace, build_matmul_trace
-from repro.core.workloads import SPATIAL, TEMPORAL, AttnWorkload
+from repro.core.events import COLUMNS
+from repro.core.events import EV_BYPASS
+from repro.core.events import EV_EVICT
+from repro.core.events import EV_FILL
+from repro.core.events import EV_GEAR
+from repro.core.events import EV_HIT
+from repro.core.events import EV_MSHR
+from repro.core.events import EV_RETIRE
+from repro.core.events import EV_WB
+from repro.core.events import SCHEMA_VERSION
+from repro.core.events import canonical_order
+from repro.core.events import decode_event
+from repro.core.events import stream_digest
+from repro.core.traces import build_fa2_trace
+from repro.core.traces import build_matmul_trace
+from repro.core.workloads import AttnWorkload
+from repro.core.workloads import SPATIAL
+from repro.core.workloads import TEMPORAL
 
 CFG = SimConfig(llc_bytes=256 * 1024, llc_slices=8)
 TINY_T = AttnWorkload("tiny-t", n_q_heads=8, n_kv_heads=4, head_dim=128,

@@ -5,11 +5,18 @@ calls they replace — same floats, same tie-breaks, same NaN handling."""
 
 import pytest
 
-from repro.core import (ModelParams, SimConfig, named_policy, predict,
-                        predict_batch, run_policies)
-from repro.core.analytical import _fit_params_reference, fit_params
-from repro.dataflows import (SUITE_POLICIES, lower_to_counts,
-                             lower_to_trace, suite_case)
+from repro.core import ModelParams
+from repro.core import SimConfig
+from repro.core import named_policy
+from repro.core import predict
+from repro.core import predict_batch
+from repro.core import run_policies
+from repro.core.analytical import _fit_params_reference
+from repro.core.analytical import fit_params
+from repro.dataflows import SUITE_POLICIES
+from repro.dataflows import lower_to_counts
+from repro.dataflows import lower_to_trace
+from repro.dataflows import suite_case
 
 #: a dynamic-gear scenario, a pure-streaming one, and a DBP one — the
 #: three fit regimes (static, dynamic replay, closed fallback) are all on

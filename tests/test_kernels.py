@@ -7,9 +7,13 @@ import numpy as np
 import pytest
 
 from repro.core.orchestrator import CacheOrchestrator
-from repro.kernels import (attention_ref, decode_attention,
-                           decode_attention_ref, flash_attention, ssd_ref,
-                           ssd_scan, ssd_sequential_ref)
+from repro.kernels import attention_ref
+from repro.kernels import decode_attention
+from repro.kernels import decode_attention_ref
+from repro.kernels import flash_attention
+from repro.kernels import ssd_ref
+from repro.kernels import ssd_scan
+from repro.kernels import ssd_sequential_ref
 
 jax.config.update("jax_enable_x64", False)
 

@@ -6,9 +6,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCH_NAMES, get_arch, reduce_for_smoke
-from repro.models import (decode_step, forward, init_cache, init_params,
-                          lm_loss, prefill)
+from repro.configs import ARCH_NAMES
+from repro.configs import get_arch
+from repro.configs import reduce_for_smoke
+from repro.models import decode_step
+from repro.models import forward
+from repro.models import init_cache
+from repro.models import init_params
+from repro.models import lm_loss
+from repro.models import prefill
 
 B, S = 2, 32
 

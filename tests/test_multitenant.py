@@ -5,15 +5,27 @@ control in both engines and in the analytical emulation."""
 import numpy as np
 import pytest
 
-from repro.core import (SimConfig, gear_trajectory, named_policy, predict,
-                        run_policy)
-from repro.core.workloads import (TEMPORAL, AttnWorkload, DecodeWorkload,
-                                  SpecDecodeWorkload, SSDScanWorkload)
-from repro.dataflows import (compose_time_sliced, decode_paged_spec,
-                             fa2_spec, lower_to_counts, lower_to_plan,
-                             lower_to_reuse_profile, lower_to_trace,
-                             spec_decode_spec, ssd_scan_spec, suite_case,
-                             tenant_regions)
+from repro.core import SimConfig
+from repro.core import gear_trajectory
+from repro.core import named_policy
+from repro.core import predict
+from repro.core import run_policy
+from repro.core.workloads import AttnWorkload
+from repro.core.workloads import DecodeWorkload
+from repro.core.workloads import SSDScanWorkload
+from repro.core.workloads import SpecDecodeWorkload
+from repro.core.workloads import TEMPORAL
+from repro.dataflows import compose_time_sliced
+from repro.dataflows import decode_paged_spec
+from repro.dataflows import fa2_spec
+from repro.dataflows import lower_to_counts
+from repro.dataflows import lower_to_plan
+from repro.dataflows import lower_to_reuse_profile
+from repro.dataflows import lower_to_trace
+from repro.dataflows import spec_decode_spec
+from repro.dataflows import ssd_scan_spec
+from repro.dataflows import suite_case
+from repro.dataflows import tenant_regions
 from repro.dataflows.compose import REGION_ALIGN_BYTES
 
 PF = AttnWorkload("pf", 8, 4, 128, 512, group_alloc=TEMPORAL)

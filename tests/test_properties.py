@@ -5,23 +5,40 @@ import numpy as np
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings
+from hypothesis import given
+from hypothesis import settings
 from hypothesis import strategies as st
 
-from repro.core import kept_fraction, predict
+from repro.core import kept_fraction
+from repro.core import predict
 from repro.core.orchestrator import CacheOrchestrator
-from repro.core.tmu import TMU, TMUParams, TensorMeta
+from repro.core.tmu import TMU
+from repro.core.tmu import TMUParams
+from repro.core.tmu import TensorMeta
 from repro.core.traces import fa2_counts
-from repro.core.workloads import (SPATIAL, TEMPORAL, AttnWorkload,
-                                  DecodeWorkload, MoEWorkload,
-                                  PrefixShareWorkload, SpecDecodeWorkload,
-                                  SSDScanWorkload)
-from repro.dataflows import (compose_time_sliced, decode_paged_spec,
-                             fa2_spec, lower_to_counts, lower_to_trace,
-                             matmul_spec, mlp_chain_spec, moe_ffn_spec,
-                             prefix_share_spec, spec_decode_spec,
-                             ssd_scan_spec, tenant_regions)
-from repro.launch.roofline import _shape_bytes, _wire_factor, param_count
+from repro.core.workloads import AttnWorkload
+from repro.core.workloads import DecodeWorkload
+from repro.core.workloads import MoEWorkload
+from repro.core.workloads import PrefixShareWorkload
+from repro.core.workloads import SPATIAL
+from repro.core.workloads import SSDScanWorkload
+from repro.core.workloads import SpecDecodeWorkload
+from repro.core.workloads import TEMPORAL
+from repro.dataflows import compose_time_sliced
+from repro.dataflows import decode_paged_spec
+from repro.dataflows import fa2_spec
+from repro.dataflows import lower_to_counts
+from repro.dataflows import lower_to_trace
+from repro.dataflows import matmul_spec
+from repro.dataflows import mlp_chain_spec
+from repro.dataflows import moe_ffn_spec
+from repro.dataflows import prefix_share_spec
+from repro.dataflows import spec_decode_spec
+from repro.dataflows import ssd_scan_spec
+from repro.dataflows import tenant_regions
+from repro.launch.roofline import _shape_bytes
+from repro.launch.roofline import _wire_factor
+from repro.launch.roofline import param_count
 
 
 # ---------------------------------------------------------------------------
@@ -406,3 +423,18 @@ def test_chunked_compile_matches_monolithic(data):
     assert set(mono.history) == set(chunked.history)
     for k in mono.history:
         np.testing.assert_array_equal(mono.history[k], chunked.history[k])
+
+
+# ---------------------------------------------------------------------------
+# Static-verifier soundness (DESIGN.md §12): every spec the suite's
+# builders can produce is error-free under the full rule inventory — no
+# false positives on known-good specs, for any draw.
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_random_specs_carry_no_error_tier_diagnostics(data):
+    from repro.dataflows import verify_spec
+
+    spec = _random_spec(data.draw)
+    res = verify_spec(spec)
+    assert not res.has_errors, res.summary()

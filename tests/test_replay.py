@@ -7,9 +7,13 @@ import pytest
 
 from repro.core.events import EventSink
 from repro.core.simulator import SimConfig
-from repro.serve.replay import (ReplayConfig, replay_spec, run_replay)
-from repro.serve.scheduler import ServeTruncation, SlotScheduler
-from repro.serve.traffic import RequestStream, TrafficConfig
+from repro.serve.replay import ReplayConfig
+from repro.serve.replay import replay_spec
+from repro.serve.replay import run_replay
+from repro.serve.scheduler import ServeTruncation
+from repro.serve.scheduler import SlotScheduler
+from repro.serve.traffic import RequestStream
+from repro.serve.traffic import TrafficConfig
 
 # Hypothesis widens the seed coverage where installed (CI); the
 # parametrized variants below keep the invariants exercised without it.

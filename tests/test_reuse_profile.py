@@ -5,15 +5,30 @@ over the closed forms (DESIGN.md §5)."""
 import numpy as np
 import pytest
 
-from repro.core import (SimConfig, gear_trajectory, named_policy, predict,
-                        fit_params, run_policies, run_policy)
-from repro.core.workloads import (SPATIAL, TEMPORAL, AttnWorkload,
-                                  DecodeWorkload, PrefixShareWorkload,
-                                  SpecDecodeWorkload, SSDScanWorkload)
-from repro.dataflows import (fa2_spec, decode_paged_spec, lower_to_counts,
-                             lower_to_reuse_profile, lower_to_trace,
-                             matmul_spec, mlp_chain_spec, prefix_share_spec,
-                             spec_decode_spec, ssd_scan_spec)
+from repro.core import SimConfig
+from repro.core import fit_params
+from repro.core import gear_trajectory
+from repro.core import named_policy
+from repro.core import predict
+from repro.core import run_policies
+from repro.core import run_policy
+from repro.core.workloads import AttnWorkload
+from repro.core.workloads import DecodeWorkload
+from repro.core.workloads import PrefixShareWorkload
+from repro.core.workloads import SPATIAL
+from repro.core.workloads import SSDScanWorkload
+from repro.core.workloads import SpecDecodeWorkload
+from repro.core.workloads import TEMPORAL
+from repro.dataflows import decode_paged_spec
+from repro.dataflows import fa2_spec
+from repro.dataflows import lower_to_counts
+from repro.dataflows import lower_to_reuse_profile
+from repro.dataflows import lower_to_trace
+from repro.dataflows import matmul_spec
+from repro.dataflows import mlp_chain_spec
+from repro.dataflows import prefix_share_spec
+from repro.dataflows import spec_decode_spec
+from repro.dataflows import ssd_scan_spec
 
 TINY_T = AttnWorkload("tiny-t", 8, 4, 128, 1024, group_alloc=TEMPORAL)
 TINY_S = AttnWorkload("tiny-s", 16, 4, 128, 1024, group_alloc=SPATIAL)
@@ -83,7 +98,7 @@ def _measure_trace_distances(trace, dbp=False):
                 continue
             step = steps[r]
             for (tid, tile), is_store in (
-                    [(l, False) for l in step.loads]
+                    [(ld, False) for ld in step.loads]
                     + [(s, True) for s in step.stores]):
                 if trace.tensors[tid].bypass_all:
                     continue
@@ -331,8 +346,8 @@ def test_profile_model_beats_closed_on_matmul_class():
     for model in ("closed", "profile"):
         params = fit_params(pts, hw, model=model)
         errs[model] = np.mean([
-            abs(predict(c, l, p, hw, params, v, g, n_rounds=r,
+            abs(predict(c, sz, p, hw, params, v, g, n_rounds=r,
                         model=model).cycles - t) / t
-            for (c, l, p, v, g, r, t) in pts])
+            for (c, sz, p, v, g, r, t) in pts])
     assert errs["profile"] < errs["closed"], errs
     assert errs["profile"] < 0.25, errs

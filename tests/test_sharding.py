@@ -1,11 +1,14 @@
 """Tests for the logical-axis sharding rules."""
 
 import jax
-import pytest
 from jax.sharding import PartitionSpec as P
+import pytest
 
 from repro.compat import abstract_mesh
-from repro.sharding import act_axes, constrain, logical_spec, use_mesh
+from repro.sharding import act_axes
+from repro.sharding import constrain
+from repro.sharding import logical_spec
+from repro.sharding import use_mesh
 from repro.sharding.api import ACT_SEQ
 
 

@@ -7,9 +7,15 @@ paper-scale runs live in benchmarks/.
 import numpy as np
 import pytest
 
-from repro.core import (SimConfig, build_fa2_trace, build_matmul_trace,
-                        fa2_counts, named_policy, run_policy)
-from repro.core.workloads import SPATIAL, TEMPORAL, AttnWorkload
+from repro.core import SimConfig
+from repro.core import build_fa2_trace
+from repro.core import build_matmul_trace
+from repro.core import fa2_counts
+from repro.core import named_policy
+from repro.core import run_policy
+from repro.core.workloads import AttnWorkload
+from repro.core.workloads import SPATIAL
+from repro.core.workloads import TEMPORAL
 
 TINY_TEMPORAL = AttnWorkload("tiny-t", n_q_heads=8, n_kv_heads=4,
                              head_dim=128, seq_len=1024,
@@ -41,7 +47,7 @@ def test_trace_structure_spatial():
     # spatial: each line touched by every group member per q-tile pass
     assert all(m.n_acc == TINY_SPATIAL.n_q_tiles * 4 for m in kv)
     # exactly one lagging (non-leader) core per group
-    assert sum(not l for l in tr.core_is_leader) == 1  # gs=4, 4 cores=1 group
+    assert sum(not ldr for ldr in tr.core_is_leader) == 1  # gs=4, 4 cores=1 group
 
 
 def test_counts_match_trace_totals():

@@ -8,16 +8,26 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.compat import shard_map
-from repro.configs import get_arch, reduce_for_smoke
 from repro.checkpoint import CheckpointManager
-from repro.data import SyntheticLM, make_batch
-from repro.models import decode_step, init_params, prefill
-from repro.serve import Request, ServeEngine
-from repro.train import (AdamWConfig, StepWatchdog, compressed_psum_mean,
-                         init_error_feedback, init_train_state, lr_schedule,
-                         make_train_step, opt_logical_axes,
-                         param_logical_axes)
+from repro.compat import shard_map
+from repro.configs import get_arch
+from repro.configs import reduce_for_smoke
+from repro.data import SyntheticLM
+from repro.data import make_batch
+from repro.models import decode_step
+from repro.models import init_params
+from repro.models import prefill
+from repro.serve import Request
+from repro.serve import ServeEngine
+from repro.train import AdamWConfig
+from repro.train import StepWatchdog
+from repro.train import compressed_psum_mean
+from repro.train import init_error_feedback
+from repro.train import init_train_state
+from repro.train import lr_schedule
+from repro.train import make_train_step
+from repro.train import opt_logical_axes
+from repro.train import param_logical_axes
 
 CFG = reduce_for_smoke(get_arch("llama3.2-3b"))
 

@@ -3,9 +3,9 @@ REPRO_SPS_BUDGET) and the pinned at-row saturation-residue ceilings."""
 
 import json
 import os
+from pathlib import Path
 import subprocess
 import sys
-from pathlib import Path
 
 REPO = Path(__file__).resolve().parents[1]
 GATE = REPO / "scripts" / "suite_gate.py"

@@ -6,10 +6,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (CacheOrchestrator, SimConfig, build_fa2_trace,
-                        fa2_counts, named_policy, predict, run_policy)
-from repro.core.workloads import TEMPORAL, AttnWorkload
-from repro.kernels import attention_ref, flash_attention
+from repro.core import CacheOrchestrator
+from repro.core import SimConfig
+from repro.core import build_fa2_trace
+from repro.core import fa2_counts
+from repro.core import named_policy
+from repro.core import predict
+from repro.core import run_policy
+from repro.core.workloads import AttnWorkload
+from repro.core.workloads import TEMPORAL
+from repro.kernels import attention_ref
+from repro.kernels import flash_attention
 
 
 WL = AttnWorkload("sys-t", n_q_heads=8, n_kv_heads=8, head_dim=128,

@@ -1,9 +1,11 @@
 """Unit tests for the TMU functional model (paper §IV-B, Table I/III)."""
 
-import numpy as np
 import pytest
 
-from repro.core.tmu import TMU, DeadFIFO, TMUParams, TensorMeta
+from repro.core.tmu import DeadFIFO
+from repro.core.tmu import TMU
+from repro.core.tmu import TMUParams
+from repro.core.tmu import TensorMeta
 
 
 def test_dead_fifo_bounded_and_fifo_order():

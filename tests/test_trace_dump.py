@@ -1,0 +1,73 @@
+"""scripts/trace_dump.py: window render, npz export round-trip, and
+bad-args exit codes (shipped in PR 7 without dedicated tests)."""
+
+from pathlib import Path
+import subprocess
+import sys
+
+import numpy as np
+
+from repro.core.events import COLUMNS
+from repro.core.events import SCHEMA_VERSION
+
+REPO = Path(__file__).resolve().parents[1]
+DUMP = REPO / "scripts" / "trace_dump.py"
+
+
+def _dump(*args):
+    return subprocess.run([sys.executable, str(DUMP), *args],
+                          capture_output=True, text=True, cwd=REPO)
+
+
+def test_head_render():
+    proc = _dump("matmul", "--policy", "at+dbp", "--head", "5")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    lines = proc.stdout.splitlines()
+    header = [ln for ln in lines if ln.startswith("# matmul")]
+    assert header and "events, digest" in header[0]
+    events = [ln for ln in lines if not ln.startswith("#")]
+    assert len(events) == 5
+
+
+def test_round_window_render():
+    proc = _dump("matmul", "--round", "4", "--window", "1")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "# rounds 3..5:" in proc.stdout
+    # every printed event sits inside the requested window
+    for ln in proc.stdout.splitlines():
+        if ln.startswith("#"):
+            continue
+        assert ln.startswith(("round=3", "round=4", "round=5")), ln
+
+
+def test_npz_export_round_trip(tmp_path):
+    out = tmp_path / "events.npz"
+    proc = _dump("matmul", "--npz", str(out))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert out.exists()
+    data = np.load(out)
+    assert set(COLUMNS) <= set(data.files)
+    assert data["schema_version"][0] == SCHEMA_VERSION
+    n = data["round"].shape[0]
+    assert n > 0
+    assert all(data[c].shape[0] == n for c in COLUMNS)
+    # the header's event count is the exported row count
+    head = proc.stdout.splitlines()[0]
+    assert f"{n} events" in head
+
+
+def test_unknown_scenario_exits_2():
+    proc = _dump("no-such-scenario")
+    assert proc.returncode == 2
+    assert "unknown suite scenario" in proc.stderr
+
+
+def test_unknown_policy_exits_2():
+    proc = _dump("matmul", "--policy", "no-such-policy")
+    assert proc.returncode == 2
+    assert "unknown policy" in proc.stderr
+
+
+def test_bad_engine_exits_2():
+    proc = _dump("matmul", "--engine", "warp")
+    assert proc.returncode == 2          # argparse choices
