@@ -10,7 +10,11 @@ paper-level claims need side by side:
 * cache effectiveness — hit rate, cycles, speedup vs LRU;
 * replay cost — rounds/sec wall throughput, peak RSS, and the
   peak-vs-total seen-bitmap ratio that demonstrates bounded-window
-  memory (``scripts/replay_gate.py`` gates both in CI).
+  memory (``scripts/replay_gate.py`` gates both in CI);
+* the at-tier decay-and-recovery curve — per-policy speedup vs replay
+  length (96/1k/5k requests) under both the bump and the pooled page
+  allocator, with the verifier's DCO202 tier-aliasing count per cell
+  (flat under pooled, growing under bump — also CI-gated).
 
 Default grid is a 2·10⁴-request Poisson trace; ``--full`` scales to
 10⁵ requests.  ``--smoke`` (standalone CLI) is the ≈5·10³-request CI
@@ -27,12 +31,19 @@ from .common import save
 
 #: policy axis: baseline, the dead-block predictor the serving claim
 #: (§VI-F) rests on, and the at-composed variant.  DBP wins at every
-#: replay length (~1.1–1.2× over LRU); the *at* tier decays with
-#: replay length because its address-tag tiers lose their meaning
-#: under the replay's ever-growing bump allocator (1.25× at 96
-#: requests → <1× beyond a few hundred) — see the ROADMAP note on
-#: paged address-pool reuse.
+#: replay length (~1.1–1.2× over LRU); under the bump allocator the
+#: *at* tier decays with replay length because its address-tag tiers
+#: lose their meaning as the replay mints fresh addresses forever
+#: (1.25× at 96 requests → <1× beyond a few hundred), while the pooled
+#: page allocator recycles retired KV regions and keeps the tiers
+#: live — the decay-and-recovery curve below records both.
 REPLAY_POLICIES = ("lru", "dbp", "at+dbp")
+
+#: decay-and-recovery curve axes: replay lengths spanning the regime
+#: where the bump at-tier collapses (96 → 5k requests), under both
+#: address-space strategies (repro.dataflows.addr)
+CURVE_LENGTHS = (96, 1000, 5000)
+CURVE_ALLOCATORS = ("bump", "pooled")
 
 #: the contested regime the paper studies: the LLC holds roughly the
 #: live KV working set of a full batch, so completed requests' dead
@@ -43,8 +54,59 @@ N_FULL = 100_000
 N_SMOKE = 5_000
 
 
+def _curve(lengths=CURVE_LENGTHS, *, process: str = "poisson",
+           seed: int = 0, policies=REPLAY_POLICIES):
+    """Per-policy speedup vs replay length under both allocators, plus
+    the DCO202 tier-aliasing count from a verified baseline run per
+    cell (the count is a property of the emitted address stream, so one
+    verified run covers the cell).  Returns the list of cells that
+    lands in the report's ``curve`` section and drives the allocator
+    gates in ``scripts/replay_gate.py``."""
+    from repro.core.simulator import SimConfig
+    from repro.serve.replay import ReplayConfig
+    from repro.serve.replay import run_replay
+    from repro.serve.traffic import TrafficConfig
+
+    cfg = SimConfig(llc_bytes=LLC_BYTES)
+    cells = []
+    for n in lengths:
+        traffic = TrafficConfig(n_requests=n, seed=seed, process=process)
+        for alloc in CURVE_ALLOCATORS:
+            rcfg = ReplayConfig(n_cores=cfg.n_cores, allocator=alloc)
+            rows = {}
+            base_cycles = None
+            dco202 = None
+            wall_s = 0.0
+            for i, pol in enumerate(policies):
+                t0 = time.perf_counter()
+                res = run_replay(traffic, pol, cfg, rcfg, mode="stream",
+                                 verify=(i == 0))
+                wall_s += time.perf_counter() - t0
+                if base_cycles is None:
+                    base_cycles = res.sim.cycles
+                if res.diagnostics is not None:
+                    dco202 = res.diagnostics.count("DCO202")
+                rows[pol] = {
+                    "cycles": res.sim.cycles,
+                    "hit_rate": res.sim.hit_rate,
+                    "speedup_vs_lru": base_cycles / res.sim.cycles,
+                }
+            cell = {"n_requests": n, "allocator": alloc,
+                    "dco202": dco202, "wall_s": wall_s, "rows": rows}
+            cells.append(cell)
+            derived = ";".join(
+                f"{pol}_vs_lru={rows[pol]['speedup_vs_lru']:.3f}"
+                for pol in policies if pol != "lru")
+            emit(f"replay_curve[{alloc}]@{n}", wall_s * 1e6,
+                 f"{derived};dco202={dco202}",
+                 n_requests=n, allocator=alloc, dco202=dco202,
+                 **{f"speedup_{pol}": rows[pol]["speedup_vs_lru"]
+                    for pol in policies})
+    return cells
+
+
 def _bench(n_requests: int, *, process: str = "poisson", seed: int = 0,
-           policies=REPLAY_POLICIES):
+           policies=REPLAY_POLICIES, curve=None):
     from repro.core.simulator import SimConfig
     from repro.serve.replay import run_replay
     from repro.serve.traffic import TrafficConfig
@@ -97,13 +159,15 @@ def _bench(n_requests: int, *, process: str = "poisson", seed: int = 0,
         "completed": int(table[policies[0]]["slo"]
                          .get("completed", {}).get("n", 0)),
         "rows": table,
+        "curve": curve,
     })
     return table
 
 
 def run(full: bool = False) -> None:
     """Harness entry point (``benchmarks.run``)."""
-    _bench(N_FULL if full else N_DEFAULT)
+    curve = _curve()
+    _bench(N_FULL if full else N_DEFAULT, curve=curve)
 
 
 def main(argv=None) -> None:
@@ -119,9 +183,15 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     if args.smoke:
-        _bench(args.n or N_SMOKE, policies=("dbp",))
+        # CI budget check: one 5k-policy run plus the two-allocator
+        # decay/recovery curve the replay gate asserts on (dbp dropped
+        # from the curve — the gates read lru and at+dbp only)
+        curve = _curve(policies=("lru", "at+dbp"))
+        _bench(args.n or N_SMOKE, policies=("dbp",), curve=curve)
     else:
-        _bench(args.n or (N_FULL if args.full else N_DEFAULT))
+        curve = _curve()
+        _bench(args.n or (N_FULL if args.full else N_DEFAULT),
+               curve=curve)
 
 
 if __name__ == "__main__":

@@ -17,7 +17,12 @@ CI smoke or a full 10⁵-request sweep), per swept policy:
   silently fell back to one monolithic window is not testing the
   streaming path);
 * every generated request completed (the continuous-batching loop
-  drained), and the TTFT/TPOT SLO percentiles are present and ordered.
+  drained), and the TTFT/TPOT SLO percentiles are present and ordered;
+* the allocator decay/recovery curve (both-allocator 96→5k smoke):
+  the bump allocator's DCO202 tier-aliasing count *grows* with replay
+  length while the pooled allocator's stays flat, and pooled
+  allocation recovers the at-tier — at+dbp vs lru ≥ 1.0× at the
+  1000-request point where the bump baseline had decayed to ~0.67×.
 
 Run it immediately after a ``benchmarks.replay_bench`` invocation —
 the benchmark always writes ``reports/benchmarks/replay_bench.json``.
@@ -35,6 +40,14 @@ DEFAULT_BUDGET_SECONDS = 30.0
 #: (measured ~0.09 at 5k requests; the ratio shrinks as replays grow,
 #: so the ceiling only loosens relative to the measurement)
 DEFAULT_MAX_PEAK_FRACTION = 0.5
+#: absolute slack on the pooled allocator's DCO202 count between the
+#: shortest and the longest curve length (measured flat — 9 at 96
+#: requests, 9 at 5k — vs bump's 0 → ~4.9k; the count may wobble by a
+#: few warmup aliases but must not scale with replay length)
+DEFAULT_DCO202_SLACK = 16
+#: at-tier recovery floor: pooled at+dbp vs lru at the >=1k-request
+#: points (bump baseline decayed to ~0.67x; pooled measured ~1.19x)
+DEFAULT_AT_TIER_FLOOR = 1.0
 
 ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
 ap.add_argument("report", nargs="?",
@@ -48,6 +61,13 @@ ap.add_argument("--budget-seconds", type=float,
 ap.add_argument("--max-peak-fraction", type=float,
                 default=DEFAULT_MAX_PEAK_FRACTION,
                 help="seen-bitmap peak / total declared lines ceiling "
+                     "(default %(default)s)")
+ap.add_argument("--dco202-slack", type=int, default=DEFAULT_DCO202_SLACK,
+                help="allowed pooled DCO202 growth, shortest to longest "
+                     "curve length (default %(default)s)")
+ap.add_argument("--at-tier-floor", type=float,
+                default=DEFAULT_AT_TIER_FLOOR,
+                help="pooled at+dbp vs lru floor at >=1k requests "
                      "(default %(default)s)")
 args = ap.parse_args()
 
@@ -84,7 +104,52 @@ for pol, row in report["rows"].items():
         if not (0.0 < pct["p50"] <= pct["p95"] <= pct["p99"]):
             sys.exit(f"{pol}: {metric} percentiles malformed: {pct}")
 
+# --- allocator decay/recovery curve -----------------------------------
+curve = report.get("curve")
+if not curve:
+    sys.exit("report has no allocator curve — re-run "
+             "benchmarks.replay_bench (it sweeps 96/1k/5k requests "
+             "under both allocators)")
+cells = {(c["n_requests"], c["allocator"]): c for c in curve}
+lengths = sorted({c["n_requests"] for c in curve})
+for alloc in ("bump", "pooled"):
+    missing = [n for n in lengths if (n, alloc) not in cells]
+    if missing:
+        sys.exit(f"curve is missing {alloc} cells at {missing}")
+lo, hi = lengths[0], lengths[-1]
+
+bump_lo = int(cells[(lo, "bump")]["dco202"])
+bump_hi = int(cells[(hi, "bump")]["dco202"])
+pooled_lo = int(cells[(lo, "pooled")]["dco202"])
+pooled_hi = int(cells[(hi, "pooled")]["dco202"])
+if bump_hi <= bump_lo:
+    sys.exit(f"bump DCO202 count did not grow with replay length "
+             f"({bump_lo} at {lo} requests -> {bump_hi} at {hi}) — the "
+             f"decay baseline the pooled allocator is measured against "
+             f"has disappeared; re-check the verifier wiring")
+if pooled_hi > pooled_lo + args.dco202_slack:
+    sys.exit(f"pooled DCO202 count grew with replay length ({pooled_lo} "
+             f"at {lo} requests -> {pooled_hi} at {hi}, slack "
+             f"{args.dco202_slack}) — page recycling is no longer "
+             f"keeping tag tiers correlated with liveness")
+
+at_points = [(n, cells[(n, "pooled")]["rows"].get("at+dbp"))
+             for n in lengths if n >= 1000]
+for n, row in at_points:
+    if row is None:
+        sys.exit(f"curve pooled cell at {n} requests has no at+dbp row "
+                 f"— the at-tier recovery gate needs it")
+    sp = float(row["speedup_vs_lru"])
+    if sp < args.at_tier_floor:
+        sys.exit(f"pooled at+dbp vs lru is {sp:.3f}x at {n} requests — "
+                 f"below the {args.at_tier_floor}x at-tier recovery "
+                 f"floor (bump baseline decays to ~0.67x here)")
+
 polys = list(report["rows"])
 print(f"replay gate OK: {n_requests} requests drained over {polys}; "
       f"all within {args.budget_seconds} s and "
-      f"peak-seen <= {args.max_peak_fraction} of declared")
+      f"peak-seen <= {args.max_peak_fraction} of declared; "
+      f"DCO202 bump {bump_lo}->{bump_hi} vs pooled {pooled_lo}->"
+      f"{pooled_hi} over {lo}->{hi} requests; pooled at+dbp "
+      + ", ".join(f"{float(r['speedup_vs_lru']):.2f}x@{n}"
+                  for n, r in at_points))

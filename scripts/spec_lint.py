@@ -40,7 +40,8 @@ EXIT_USAGE = 2
 
 def _print_rules() -> None:
     for r in rules_inventory():
-        print(f"{r['code']} [{r['severity']:5s}] {r['title']}")
+        print(f"{r['code']} [{r['severity']:5s}] "
+              f"[alloc:{r['allocator']:6s}] {r['title']}")
         print(f"    assumes:  {r['assumption']}")
         print(f"    consumer: {r['consumer']}")
 
@@ -69,6 +70,11 @@ def main(argv=None) -> int:
 
     if args.rules:
         _print_rules()
+        if args.json is not None:
+            args.json.parent.mkdir(parents=True, exist_ok=True)
+            args.json.write_text(json.dumps(
+                {"rules": rules_inventory()}, indent=2, sort_keys=True))
+            print(f"# rule inventory written to {args.json}")
         return EXIT_OK
 
     keys = registry_keys() if args.all else args.scenarios

@@ -30,9 +30,11 @@ CONFORMANCE_POLICIES: Tuple[str, ...] = ("lru", "dbp", "at+dbp", "all")
 
 #: CI smoke subset: small dense, paged-decode, multi-tenant composed,
 #: and generator-driven replay traces — the structurally distinct event
-#: mixes (serve-replay adds mid-run tensor churn from the batching loop)
+#: mixes (serve-replay adds mid-run tensor churn from the batching loop;
+#: serve-replay-pooled additionally recycles addresses, so dense-id and
+#: owner attribution must survive cross-generation address reuse)
 SMOKE_SCENARIOS: Tuple[str, ...] = ("matmul", "decode-paged", "mt-spec-ssd",
-                                    "serve-replay")
+                                    "serve-replay", "serve-replay-pooled")
 
 
 def matrix_entries(smoke: bool = False,

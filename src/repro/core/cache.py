@@ -152,6 +152,10 @@ class SharedLLC:
         # tags), so lookup and victim selection skip validity masking
         self.last_use = np.full((S, A), _BIG, dtype=np.int64)
         self.prio = np.full((S, A), _BIG, dtype=np.int64)
+        # owning tensor id per resident line (event attribution that
+        # stays exact when a pooled allocator recycles addresses across
+        # tensor generations); maintained only when callers thread tids
+        self.owner = np.full((S, A), -1, dtype=np.int64)
         self._clock = 0  # monotone access counter for LRU
         # tenant attribution state: regions are huge and aligned, so the
         # byte-address region map projects exactly onto tag space
@@ -224,6 +228,7 @@ class SharedLLC:
         bypass_eligible=True,
         force_bypass=False,
         cores=None,
+        tids=None,
     ) -> np.ndarray:
         """Access a burst of line addresses; returns per-line outcome codes.
 
@@ -237,6 +242,11 @@ class SharedLLC:
         ``cores``          optional int64 array (issuing core per line),
                            only consulted for event-trace attribution
                            when a sink is attached.
+        ``tids``           optional int64 array (owning tensor per line):
+                           exact event attribution under address reuse —
+                           accesses carry their tensor, and the per-way
+                           ``owner`` state attributes evictions and
+                           write-backs to the victim's tensor.
 
         Duplicate line addresses within one burst model MSHR behavior:
         the second occurrence of an *allocated* line hits (MSHR/LLC hit —
@@ -254,7 +264,8 @@ class SharedLLC:
         if np.unique(sets).shape[0] == n:
             out[:] = self._access_unique(line_addrs, sets, seen_before,
                                          is_write, bypass_eligible,
-                                         force_bypass, cores=cores)
+                                         force_bypass, cores=cores,
+                                         tids=tids)
             return out
         # split into chunks with unique sets so state updates don't collide
         order = np.argsort(sets, kind="stable")
@@ -274,7 +285,8 @@ class SharedLLC:
                 line_addrs[sel], sets[sel],
                 _index(seen_before, sel), _index(is_write, sel),
                 _index(bypass_eligible, sel), _index(force_bypass, sel),
-                cores=None if cores is None else cores[sel])
+                cores=None if cores is None else cores[sel],
+                tids=None if tids is None else tids[sel])
         return out
 
     # ------------------------------------------------------------------
@@ -287,6 +299,7 @@ class SharedLLC:
         bypass_eligible=True,
         force_bypass=False,
         cores=None,
+        tids=None,
     ) -> np.ndarray:
         """:meth:`access_burst` with the set mapping and pass split taken
         from a precomputed :class:`AccessPlan` (same outcome codes and
@@ -301,7 +314,8 @@ class SharedLLC:
             out[:] = self._access_unique(plan.line_addrs, plan.sets,
                                          seen_before, is_write,
                                          bypass_eligible, force_bypass,
-                                         tags=tags, cores=cores)
+                                         tags=tags, cores=cores,
+                                         tids=tids)
             return out
         for sel in plan.passes:
             out[sel] = self._access_unique(
@@ -309,13 +323,14 @@ class SharedLLC:
                 _index(seen_before, sel), _index(is_write, sel),
                 _index(bypass_eligible, sel), _index(force_bypass, sel),
                 tags=None if tags is None else tags[sel],
-                cores=None if cores is None else cores[sel])
+                cores=None if cores is None else cores[sel],
+                tids=None if tids is None else tids[sel])
         return out
 
     # ------------------------------------------------------------------
     def _access_unique(self, line_addrs, sets, seen_before, is_write,
                        bypass_eligible, force_bypass,
-                       tags=None, cores=None) -> np.ndarray:
+                       tags=None, cores=None, tids=None) -> np.ndarray:
         n = line_addrs.shape[0]
         sink = self.sink
         if tags is None:
@@ -340,6 +355,10 @@ class SharedLLC:
         if n_hit:
             hs, hw = sets[hit], hit_way[hit]
             self.last_use[hs, hw] = now
+            if tids is not None:
+                # a hit under address reuse means the recycled line is
+                # adopted by its new tensor generation
+                self.owner[hs, hw] = tids[hit]
             w = is_write[hit]
             if w.any():
                 self.dirty[hs[w], hw[w]] = True
@@ -352,7 +371,9 @@ class SharedLLC:
             if sink is not None:
                 sink.emit_lines(EV_HIT, line_addrs[hit], sets=hs, ways=hw,
                                 cores=None if cores is None
-                                else cores[hit])
+                                else cores[hit],
+                                tensors=None if tids is None
+                                else tids[hit])
             if n_hit == n:
                 return out
 
@@ -378,6 +399,7 @@ class SharedLLC:
         self.stats["cold_misses"] += (n - n_hit) - n_conf
         self.stats["conflict_misses"] += n_conf
 
+        m_tids = None if tids is None else tids[miss]
         if sink is not None:
             m_addrs = line_addrs[miss]
             m_cores = None if cores is None else cores[miss]
@@ -386,7 +408,9 @@ class SharedLLC:
                 sink.emit_lines(EV_BYPASS, m_addrs[bp], sets=m_sets[bp],
                                 cores=None if m_cores is None
                                 else m_cores[bp],
-                                aux=m_seen[bp].astype(np.int64))
+                                aux=m_seen[bp].astype(np.int64),
+                                tensors=None if m_tids is None
+                                else m_tids[bp])
 
         # --- allocation (alloc-on-fill; write-allocate) -----------------------
         alloc = ~bypass
@@ -394,8 +418,10 @@ class SharedLLC:
             a_sets = m_sets[alloc]
             a_tags = m_tags[alloc]
             way, evicted_valid, evicted_dead = self._select_victims(a_sets)
-            # victim tags must be read before the fill overwrites them
+            # victim tags/owners must be read before the fill overwrites
             v_tags = self.tags[a_sets, way] if sink is not None else None
+            v_owner = (self.owner[a_sets, way]
+                       if sink is not None and tids is not None else None)
             # writeback accounting for dirty victims
             wb = self.dirty[a_sets, way] & evicted_valid
             self.stats["writebacks"] += int(wb.sum())
@@ -412,6 +438,8 @@ class SharedLLC:
             self.dirty[a_sets, way] = is_write[miss][alloc]
             self.last_use[a_sets, way] = now
             self.prio[a_sets, way] = self._priorities(a_tags)
+            if tids is not None:
+                self.owner[a_sets, way] = m_tids[alloc]
             ev_full = np.zeros(m_sets.shape[0], dtype=bool)
             ev_full[alloc] = evicted_valid
             if sink is not None:
@@ -421,16 +449,19 @@ class SharedLLC:
                     sink.emit_lines(
                         EV_EVICT, geom.line_addr_of(a_sets[ev], v_tags[ev]),
                         sets=a_sets[ev], ways=way[ev],
-                        aux=2 * v_tags[ev] + evicted_dead[ev])
+                        aux=2 * v_tags[ev] + evicted_dead[ev],
+                        tensors=None if v_owner is None else v_owner[ev])
                 wbi = np.nonzero(wb)[0]
                 if wbi.shape[0]:
                     sink.emit_lines(
                         EV_WB, geom.line_addr_of(a_sets[wbi], v_tags[wbi]),
-                        sets=a_sets[wbi], ways=way[wbi], aux=v_tags[wbi])
+                        sets=a_sets[wbi], ways=way[wbi], aux=v_tags[wbi],
+                        tensors=None if v_owner is None else v_owner[wbi])
                 sink.emit_lines(
                     EV_FILL, m_addrs[alloc], sets=a_sets, ways=way,
                     cores=None if m_cores is None else m_cores[alloc],
-                    aux=2 * a_tags + m_seen[alloc])
+                    aux=2 * a_tags + m_seen[alloc],
+                    tensors=None if m_tids is None else m_tids[alloc])
         else:
             ev_full = np.zeros(m_sets.shape[0], dtype=bool)
 

@@ -100,6 +100,7 @@ class EventSink:
         self._ten_starts: Optional[np.ndarray] = None  # tenant region addrs
         self._ten_ids: Optional[np.ndarray] = None
         self._tenant_by_tid: Dict[int, int] = {}
+        self._live_regions: Dict[int, Tuple[int, int]] = {}  # tid -> [s, e)
         self._matrix: Optional[np.ndarray] = None
 
     # -- binding --------------------------------------------------------
@@ -119,26 +120,65 @@ class EventSink:
             self._ten_starts = None
             self._tenant_by_tid = {}
 
-    def register_tensors(self, metas) -> None:
-        """Extend the address-resolution table with tensors that joined
-        the run mid-stream (the serving-replay path registers tensors at
-        request admission).  Replay addresses come from a monotone bump
-        allocator, so appending keeps the table sorted; a safety check
-        guards that invariant."""
-        new = sorted((m.base_addr, m.tensor_id) for m in metas)
+    def register_tensors(self, metas, *, retiring_tids=None) -> None:
+        """Register tensors that join the run mid-stream (the serving
+        replay registers at request admission).
+
+        Allocator-aware liveness check: a new tensor's ``[base, end)``
+        must not overlap any *live* region — addresses may recur across
+        generations (a pooled allocator recycles retired regions), but
+        never while the previous owner is still live.  The error names
+        the offending tensor, its base, and the live region it collides
+        with.  ``retiring_tids`` lists tensors this same segment also
+        clears (declared *and* retired within one window): their regions
+        may already have been recycled in-window, so they are exempt as
+        overlap targets.  ``release_tensors`` removes regions when the
+        engine clears them.
+
+        The address-resolution fallback table (used only by emissions
+        that do not carry explicit tensor ids) is kept sorted: the
+        monotone bump case appends; recycled bases re-sort, with the
+        newest generation winning a base collision.
+        """
+        new = sorted((m.base_addr, m.tensor_id, m.size_bytes)
+                     for m in metas)
         if not new:
             return
-        starts = np.asarray([s for s, _ in new], dtype=np.int64)
-        tids = np.asarray([t for _, t in new], dtype=np.int64)
+        exempt = set(retiring_tids) if retiring_tids else set()
+        for base, tid, size in new:
+            end = base + size
+            for lt, (ls, le) in self._live_regions.items():
+                if lt == tid or lt in exempt:
+                    continue
+                if base < le and ls < end:
+                    raise ValueError(
+                        f"register_tensors: tensor {tid} at base "
+                        f"0x{base:x} ([0x{base:x}, 0x{end:x})) overlaps "
+                        f"the live region [0x{ls:x}, 0x{le:x}) of tensor "
+                        f"{lt} — the allocator handed out an address "
+                        f"range whose previous owner has not been "
+                        f"released")
+            self._live_regions[tid] = (base, end)
+        starts = np.asarray([s for s, _, _ in new], dtype=np.int64)
+        tids = np.asarray([t for _, t, _ in new], dtype=np.int64)
         if self._t_starts is None or self._t_starts.shape[0] == 0:
             self._t_starts, self._t_ids = starts, tids
             return
-        if starts[0] <= self._t_starts[-1]:
-            raise ValueError(
-                "register_tensors requires monotonically increasing "
-                "base addresses (bump allocation)")
-        self._t_starts = np.concatenate([self._t_starts, starts])
-        self._t_ids = np.concatenate([self._t_ids, tids])
+        if starts[0] > self._t_starts[-1]:
+            self._t_starts = np.concatenate([self._t_starts, starts])
+            self._t_ids = np.concatenate([self._t_ids, tids])
+            return
+        merged = dict(zip(self._t_starts.tolist(), self._t_ids.tolist()))
+        merged.update(zip(starts.tolist(), tids.tolist()))
+        pairs = sorted(merged.items())
+        self._t_starts = np.asarray([s for s, _ in pairs], dtype=np.int64)
+        self._t_ids = np.asarray([t for _, t in pairs], dtype=np.int64)
+
+    def release_tensors(self, tids) -> None:
+        """Drop cleared tensors from the live-region map so a recycling
+        allocator may hand their addresses out again."""
+        for tid in tids:
+            self._live_regions.pop(int(tid), None)
 
     def begin_round(self, round_idx: int) -> None:
         self._round = round_idx
@@ -156,10 +196,14 @@ class EventSink:
 
     # -- emission -------------------------------------------------------
     def emit_lines(self, kind: int, addrs: np.ndarray, sets=None,
-                   ways=None, cores=None, aux=None) -> None:
+                   ways=None, cores=None, aux=None, tensors=None) -> None:
         """Append one block of per-line events.  ``sets=None`` derives
         the set index from the bound geometry; ``ways``/``cores``/``aux``
-        default to -1 / -1 / 0."""
+        default to -1 / -1 / 0.  ``tensors`` carries exact per-line
+        tensor ids from the engine (required for correct attribution
+        when a pooled allocator recycles addresses across generations);
+        ``None`` falls back to address resolution, which is exact for
+        unique-address (bump) layouts."""
         k = addrs.shape[0]
         if k == 0:
             return
@@ -167,7 +211,7 @@ class EventSink:
         mat[:, 0] = self._round
         mat[:, 1] = -1 if cores is None else cores
         mat[:, 2] = self._tenant_of(addrs)
-        mat[:, 3] = self._tensor_of(addrs)
+        mat[:, 3] = self._tensor_of(addrs) if tensors is None else tensors
         mat[:, 4] = self._geom.set_of(addrs) if sets is None else sets
         mat[:, 5] = -1 if ways is None else ways
         mat[:, 6] = kind

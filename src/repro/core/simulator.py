@@ -156,8 +156,10 @@ class _RoundLedger:
     Engine contract per non-empty round: ``begin_round()`` before the
     LLC access, then ``end_round(codes, addrs, dup_counts, flops)`` with
     the merged per-line outcome codes, the merged line addresses, and
-    the number of MSHR-merged duplicates per line.  Empty rounds call
-    ``idle_round()``.
+    the number of MSHR-merged duplicates per line (plus the merged
+    per-line owning-tensor ids when an event sink is attached, so MSHR
+    events stay exactly attributed under address reuse).  Empty rounds
+    call ``idle_round()``.
     """
 
     def __init__(self, sim: "Simulator", llc: SharedLLC, trace: Trace,
@@ -215,12 +217,15 @@ class _RoundLedger:
             self._t_wb_before = self.llc.tenant_wb.copy()
 
     def end_round(self, codes: np.ndarray, addrs: np.ndarray,
-                  dup_counts: np.ndarray, flops_round: float) -> None:
+                  dup_counts: np.ndarray, flops_round: float,
+                  tids: Optional[np.ndarray] = None) -> None:
         if self.sink is not None:
             d = np.nonzero(dup_counts > 0)[0]
             if d.shape[0]:
                 self.sink.emit_lines(EV_MSHR, addrs[d],
-                                     aux=dup_counts[d].astype(np.int64))
+                                     aux=dup_counts[d].astype(np.int64),
+                                     tensors=None if tids is None
+                                     else tids[d])
         n_dups = int(dup_counts.sum())
         self.mshr_hits += n_dups
         n_hit = int((codes == C.HIT).sum()) + n_dups
@@ -511,10 +516,19 @@ class Simulator:
             seen = _grow_seen(seen, seg.n_seen_lines)
             for s0, s1 in seg.seen_resets:
                 seen[s0:s1] = False
+            if sink is not None and seg.clear_tids:
+                # a pooled allocator may hand a retiring tensor's region
+                # to a tensor declared in this same segment window, so
+                # the retirements must leave the live-region map before
+                # the new registrations are overlap-checked (the actual
+                # TMU clear still happens after the segment's rounds)
+                sink.release_tensors(seg.clear_tids)
             if seg.new_tensors:
                 tmu.register_many(seg.new_tensors)
                 if sink is not None:
-                    sink.register_tensors(seg.new_tensors)
+                    sink.register_tensors(
+                        seg.new_tensors,
+                        retiring_tids=frozenset(seg.clear_tids))
             self._consume_segment(seg.ct, geom, tmu, llc, led, seen, gqa)
             for tid in seg.clear_tids:
                 tmu.clear(tid)
@@ -544,19 +558,21 @@ class Simulator:
             elig = (ct.u_nonleader[sel] & contended) if gqa else True
 
             led.begin_round()
+            tids = ct.u_tid[sel] if sink is not None else None
             codes = llc.access_planned(plans[r],
                                        seen_before=seen_b,
                                        is_write=ct.u_write[sel],
                                        bypass_eligible=elig,
                                        force_bypass=ct.u_force[sel],
                                        cores=ct.u_core[sel]
-                                       if sink is not None else None)
+                                       if sink is not None else None,
+                                       tids=tids)
             t0, t1 = tll_off[r], tll_off[r + 1]
             if t1 > t0:
                 tmu.on_access_batch(ct.tll_tids[t0:t1], ct.tll_tiles[t0:t1],
                                     tll_tags[t0:t1], ct.tll_nacc[t0:t1])
             led.end_round(codes, ct.u_addrs[sel], ct.u_dups[sel],
-                          float(ct.flops_round[r]))
+                          float(ct.flops_round[r]), tids=tids)
 
     # ------------------------------------------------------------------
     # step engine: reference implementation over Python Step lists
@@ -586,7 +602,11 @@ class Simulator:
             elig_parts: List[np.ndarray] = []
             write_parts: List[np.ndarray] = []
             core_parts: List[np.ndarray] = []      # only when tracing
-            tll_calls: List[Tuple[int, int]] = []  # (tll_addr, tag)
+            tid_parts: List[np.ndarray] = []       # only when tracing
+            # (tensor_id, tile, tag, n_acc) — resolved here, not by
+            # address, so TLL accounting stays exact when a pooled
+            # allocator recycles address ranges across tensors
+            tll_calls: List[Tuple[int, int, int, int]] = []
             flops_round = 0.0
 
             contended = (llc.controller is not None
@@ -620,10 +640,13 @@ class Simulator:
                     write_parts.append(np.full(k, is_store, dtype=bool))
                     if sink is not None:
                         core_parts.append(np.full(k, c, dtype=np.int64))
+                        tid_parts.append(np.full(k, tid, dtype=np.int64))
                     if not is_store and not meta.bypass_all:
                         tll_addr = meta.tile_last_line(tile, line_b)
                         tll_calls.append(
-                            (tll_addr, int(geom.tag_of(np.int64(tll_addr)))))
+                            (tid, tile,
+                             int(geom.tag_of(np.int64(tll_addr))),
+                             meta.n_acc))
 
             if not addrs_parts:
                 led.idle_round()
@@ -649,21 +672,30 @@ class Simulator:
                                   minlength=first_idx.shape[0]) > 0
 
             led.begin_round()
+            # first merged occurrence keeps its requester/owner,
+            # matching the compiled lowering's u_core/u_tid
+            tids_m = (np.concatenate(tid_parts)[first_idx]
+                      if sink is not None else None)
             codes = llc.access_burst(
                 addrs[first_idx],
                 seen_before=seen_b[first_idx],
                 is_write=write_m,
                 bypass_eligible=elig_b[first_idx],
                 force_bypass=force_b[first_idx],
-                # first merged occurrence keeps its requester, matching
-                # the compiled lowering's u_core
                 cores=np.concatenate(core_parts)[first_idx]
-                if sink is not None else None)
+                if sink is not None else None,
+                tids=tids_m)
 
-            for tll_addr, tag in tll_calls:
-                tmu.on_access(tll_addr, tag)
+            if tll_calls:
+                t_tid, t_tile, t_tag, t_nacc = zip(*tll_calls)
+                tmu.on_access_batch(
+                    np.asarray(t_tid, dtype=np.int64),
+                    np.asarray(t_tile, dtype=np.int64),
+                    np.asarray(t_tag, dtype=np.int64),
+                    np.asarray(t_nacc, dtype=np.int64))
 
-            led.end_round(codes, u_addrs, counts - 1, flops_round)
+            led.end_round(codes, u_addrs, counts - 1, flops_round,
+                          tids=tids_m)
 
         return led.result(trace, self.policy.name, cfg.freq_ghz)
 

@@ -235,6 +235,11 @@ class CompiledTrace:
     * ``u_core``       issuing core of the first occurrence (event-trace
                        attribution; the MSHR merge keeps the first
                        requester, matching the step engine's unique())
+    * ``u_tid``        tensor id of the line (event-trace attribution
+                       that stays exact when a pooled allocator recycles
+                       addresses across generations; same-round
+                       duplicates of one line always belong to one
+                       tensor, so the first occurrence is exact)
     * ``u_dups``       duplicates merged away into this line (MSHR-hit
                        accounting, attributable per tenant)
 
@@ -250,7 +255,7 @@ class CompiledTrace:
 
     def __init__(self, line_bytes: int, n_rounds: int, n_seen_lines: int,
                  u_addrs, u_dense, u_write, u_force, u_nonleader, u_core,
-                 u_dups, round_off, n_acc_round, flops_round,
+                 u_tid, u_dups, round_off, n_acc_round, flops_round,
                  tll_addrs, tll_tids, tll_tiles, tll_nacc, tll_off):
         self.line_bytes = line_bytes
         self.n_rounds = n_rounds
@@ -261,6 +266,7 @@ class CompiledTrace:
         self.u_force = u_force
         self.u_nonleader = u_nonleader
         self.u_core = u_core          # first requester (event attribution)
+        self.u_tid = u_tid            # owning tensor (exact under reuse)
         self.u_dups = u_dups          # merged-away duplicates per line
         self.round_off = round_off
         self.n_acc_round = n_acc_round
@@ -327,6 +333,7 @@ class CompiledTrace:
         p_force: List[bool] = []
         p_nonlead: List[bool] = []
         p_core: List[int] = []
+        p_tid: List[int] = []
         t_round: List[int] = []      # TLL feed, in issue order
         t_addr: List[int] = []
         t_tid: List[int] = []
@@ -356,6 +363,7 @@ class CompiledTrace:
                     p_force.append(meta.bypass_all)
                     p_nonlead.append(nonleader[c])
                     p_core.append(c)
+                    p_tid.append(tid)
                     if not is_store and not meta.bypass_all:
                         t_round.append(rloc)
                         t_addr.append(meta.tile_last_line(tile, line_bytes))
@@ -378,6 +386,7 @@ class CompiledTrace:
             a_force = np.asarray(p_force, dtype=bool)[rep]
             a_nonlead = np.asarray(p_nonlead, dtype=bool)[rep]
             a_core = np.asarray(p_core, dtype=np.int64)[rep]
+            a_tid = np.asarray(p_tid, dtype=np.int64)[rep]
 
             # per-round MSHR merge: stable sort by (round, addr); the first
             # element of each (round, addr) run is the first occurrence in
@@ -396,6 +405,7 @@ class CompiledTrace:
             u_force = a_force[order][start_idx]
             u_nonleader = a_nonlead[order][start_idx]
             u_core = a_core[order][start_idx]
+            u_tid = a_tid[order][start_idx]
             u_write = np.maximum.reduceat(
                 a_write[order].astype(np.int8), start_idx).astype(bool)
             u_dups = np.diff(np.append(start_idx, n_acc_total)) - 1
@@ -406,6 +416,7 @@ class CompiledTrace:
             u_addrs = u_dense = np.empty(0, dtype=np.int64)
             u_write = u_force = u_nonleader = np.empty(0, dtype=bool)
             u_core = np.empty(0, dtype=np.int64)
+            u_tid = np.empty(0, dtype=np.int64)
             u_dups = np.empty(0, dtype=np.int64)
             round_off = np.zeros(n_rounds + 1, dtype=np.int64)
             n_acc_round = np.zeros(n_rounds, dtype=np.int64)
@@ -417,7 +428,7 @@ class CompiledTrace:
         return cls(
             line_bytes, n_rounds, n_seen,
             u_addrs, u_dense, u_write, u_force, u_nonleader, u_core,
-            u_dups,
+            u_tid, u_dups,
             round_off.astype(np.int64), n_acc_round.astype(np.int64),
             flops_round,
             np.asarray(t_addr, dtype=np.int64),
@@ -443,7 +454,7 @@ class CompiledTrace:
             self.line_bytes, round_stop - round_start, self.n_seen_lines,
             self.u_addrs[a0:a1], self.u_dense[a0:a1], self.u_write[a0:a1],
             self.u_force[a0:a1], self.u_nonleader[a0:a1],
-            self.u_core[a0:a1], self.u_dups[a0:a1],
+            self.u_core[a0:a1], self.u_tid[a0:a1], self.u_dups[a0:a1],
             self.round_off[round_start:round_stop + 1] - a0,
             self.n_acc_round[round_start:round_stop],
             self.flops_round[round_start:round_stop],

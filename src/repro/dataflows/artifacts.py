@@ -46,13 +46,13 @@ from typing import Optional
 
 import numpy as np
 
-_FORMAT_VERSION = "2"     # 2: compiled traces grew the u_core column
+_FORMAT_VERSION = "3"     # 3: compiled traces grew the u_tid column
 
 #: lowering sources whose bytes salt the on-disk key: an edit to any of
 #: them must invalidate cached artifacts (the fingerprint itself stays a
 #: pure content hash)
-_VERSIONED_SOURCES = ("ir.py", "lower.py", "reuse.py", "compose.py",
-                      "../core/traces.py")
+_VERSIONED_SOURCES = ("ir.py", "lower.py", "addr.py", "reuse.py",
+                      "compose.py", "../core/traces.py")
 
 
 # ---------------------------------------------------------------------------
@@ -221,8 +221,9 @@ def _json_unblob(arr: np.ndarray):
 # typed artifact adapters
 # ---------------------------------------------------------------------------
 _CT_ARRAYS = ("u_addrs", "u_dense", "u_write", "u_force", "u_nonleader",
-              "u_core", "u_dups", "round_off", "n_acc_round", "flops_round",
-              "tll_addrs", "tll_tids", "tll_tiles", "tll_nacc", "tll_off")
+              "u_core", "u_tid", "u_dups", "round_off", "n_acc_round",
+              "flops_round", "tll_addrs", "tll_tids", "tll_tiles",
+              "tll_nacc", "tll_off")
 
 
 def compiled_trace_key(fingerprint: str, line_bytes: int) -> str:

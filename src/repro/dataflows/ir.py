@@ -66,6 +66,8 @@ class TensorSpec:
     epoch0: int = 0             # first working-set epoch this tensor is live
     epoch1: int = 0             # last epoch (inclusive)
     sharers: int = 1            # cores co-streaming it through the LLC
+    base: Optional[int] = None  # explicit base address (pooled layouts);
+    #                             None = the lowering's bump allocator
 
     def __post_init__(self) -> None:
         if self.size_bytes <= 0 or self.tile_bytes <= 0:
@@ -78,6 +80,11 @@ class TensorSpec:
             raise ValueError(f"{self.name}: bad epoch range")
         if self.sharers < 1:
             raise ValueError(f"{self.name}: sharers must be >= 1")
+        if self.base is not None and (self.base < 0
+                                      or self.base % self.tile_bytes):
+            raise ValueError(
+                f"{self.name}: explicit base 0x{self.base:x} must be "
+                f"tile-aligned and non-negative")
 
     @property
     def num_tiles(self) -> int:
@@ -124,6 +131,10 @@ class DataflowSpec:
     tenant_of_tensor: Optional[Dict[str, int]] = None
     tenant_names: Optional[List[str]] = None
     tenant_region_align: int = 0
+    #: which address-space policy laid the spec out ("bump" | "pooled");
+    #: the verifier conditions its DCO2xx layout rules on this tag
+    #: (DESIGN.md §13) — monotone bases are a bump fact, not an IR fact
+    allocator: str = "bump"
 
     @property
     def n_cores(self) -> int:
@@ -203,6 +214,7 @@ class SpecBuilder:
         self.name = name
         self.line_bytes = line_bytes
         self.workload = workload
+        self.allocator = "bump"      # layout-policy tag for the built spec
         self._tensors: List[TensorSpec] = []
         self._programs: List[List[StepSpec]] = [[] for _ in range(n_cores)]
         self._core_group = [-1] * n_cores
@@ -214,12 +226,13 @@ class SpecBuilder:
 
     def tensor(self, name: str, *, size_bytes: int, tile_bytes: int,
                n_acc: int, operand_id: int = 0, bypass: bool = False,
-               epoch: int | Tuple[int, int] = 0, sharers: int = 1) -> str:
+               epoch: int | Tuple[int, int] = 0, sharers: int = 1,
+               base: Optional[int] = None) -> str:
         e0, e1 = (epoch, epoch) if isinstance(epoch, int) else epoch
         self._tensors.append(TensorSpec(
             name=name, size_bytes=size_bytes, tile_bytes=tile_bytes,
             n_acc=n_acc, operand_id=operand_id, bypass=bypass,
-            epoch0=e0, epoch1=e1, sharers=sharers))
+            epoch0=e0, epoch1=e1, sharers=sharers, base=base))
         return name
 
     def step(self, core: int, loads: Sequence[Access] = (),
@@ -257,7 +270,8 @@ class SpecBuilder:
             core_programs=[list(p) for p in self._programs],
             core_group=list(self._core_group),
             core_is_leader=list(self._core_is_leader),
-            line_bytes=self.line_bytes, workload=self.workload)
+            line_bytes=self.line_bytes, workload=self.workload,
+            allocator=self.allocator)
         spec.validate()
         if verify:
             from .verify import assert_clean

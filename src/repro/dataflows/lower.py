@@ -3,10 +3,12 @@
 All three consumers of dataflow knowledge — the trace-driven simulator,
 the cache-integrated analytical model (§V), and the TPU-side orchestrator
 — derive their inputs here from one :class:`~repro.dataflows.ir.DataflowSpec`.
-Address assignment is shared: every lowering sees the same bump-allocated
-layout (tile-aligned, declaration order), so the simulator's TMU metadata,
-the model's line counts, and the orchestrator's plan all describe the same
-physical tensors.
+Address assignment is shared: every lowering sees the same layout —
+explicit per-tensor bases when an :mod:`~repro.dataflows.addr` allocator
+already laid the spec out (the pooled replay path), otherwise the default
+tile-aligned bump allocation in declaration order — so the simulator's
+TMU metadata, the model's line counts, and the orchestrator's plan all
+describe the same physical tensors.
 """
 
 from __future__ import annotations
@@ -21,20 +23,8 @@ from repro.core.traces import DataflowCounts
 from repro.core.traces import Step
 from repro.core.traces import Trace
 
+from .addr import BumpAllocator
 from .ir import DataflowSpec
-
-
-class _Allocator:
-    """Bump allocator, tile-aligned, beginning away from address 0 so tag
-    bits are non-degenerate."""
-
-    def __init__(self, base: int = 1 << 30):
-        self._next = base
-
-    def alloc(self, size: int, align: int) -> int:
-        a = (self._next + align - 1) // align * align
-        self._next = a + size
-        return a
 
 
 def assign_addresses(spec: DataflowSpec) -> Dict[int, TensorMeta]:
@@ -47,9 +37,29 @@ def assign_addresses(spec: DataflowSpec) -> Dict[int, TensorMeta]:
     ``spec.tenant_region_align``, so tenants occupy disjoint address
     regions and no TMU dead-id tag region straddles two tenants
     (DESIGN.md §8.4).
+
+    Tensors may instead carry *explicit* bases (``TensorSpec.base``, set
+    by an emitter that already ran an :class:`~repro.dataflows.addr`
+    allocator — the pooled replay path): all-or-nothing per spec, and
+    the bases are used verbatim so every lowering reproduces the
+    emitter's layout.  Specs without explicit bases go through the
+    default :class:`~repro.dataflows.addr.BumpAllocator`, bit-identical
+    to the historical in-lowering bump allocator.
     """
-    alloc = _Allocator()
+    n_explicit = sum(1 for t in spec.tensors if t.base is not None)
+    if n_explicit and n_explicit != len(spec.tensors):
+        raise ValueError(
+            f"{spec.name}: explicit tensor bases are all-or-nothing "
+            f"({n_explicit}/{len(spec.tensors)} set)")
     metas: Dict[int, TensorMeta] = {}
+    if n_explicit:
+        for tid, t in enumerate(spec.tensors):
+            metas[tid] = TensorMeta(
+                tensor_id=tid, base_addr=t.base, size_bytes=t.size_bytes,
+                tile_bytes=t.tile_bytes, n_acc=t.n_acc,
+                operand_id=t.operand_id, bypass_all=t.bypass)
+        return metas
+    alloc = BumpAllocator()
     tenant_of = spec.tenant_of_tensor
     region_align = spec.tenant_region_align
     prev_tenant = None
@@ -60,9 +70,9 @@ def assign_addresses(spec: DataflowSpec) -> Dict[int, TensorMeta]:
             if tenant != prev_tenant:
                 align = max(align, region_align)
             prev_tenant = tenant
-        base = alloc.alloc(t.size_bytes, align)
+        region = alloc.alloc(t.size_bytes, t.tile_bytes, align=align)
         metas[tid] = TensorMeta(
-            tensor_id=tid, base_addr=base, size_bytes=t.size_bytes,
+            tensor_id=tid, base_addr=region.base, size_bytes=t.size_bytes,
             tile_bytes=t.tile_bytes, n_acc=t.n_acc,
             operand_id=t.operand_id, bypass_all=t.bypass)
     return metas

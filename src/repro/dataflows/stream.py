@@ -23,11 +23,22 @@ once and the bit-identity property (streamed == monolithic) is testable:
 
 Bit-identity rests on three invariants:
 
-1. **Addresses** — both emitters bump-allocate from the same base
-   (``1 << 30``), tile-aligned, in declaration order, replicating
-   :func:`repro.dataflows.lower.assign_addresses`; tensor ids are
-   declaration indices.  Identical addresses ⇒ identical set/tag
-   mapping, MSHR merges, and eviction interleaving.
+1. **Addresses** — both emitters drive the *same*
+   :class:`~repro.dataflows.addr.AddressAllocator` policy over the same
+   declare/retire call sequence; allocator state is a pure function of
+   that sequence, so the layouts agree by construction.  The default
+   :class:`~repro.dataflows.addr.BumpAllocator` reproduces
+   :func:`repro.dataflows.lower.assign_addresses` bit-exactly
+   (tile-aligned from ``1 << 30``, declaration order); a
+   :class:`~repro.dataflows.addr.PooledPageAllocator` recycles retired
+   regions identically on both paths (the monolithic emitter bakes the
+   resulting bases into the spec via ``TensorSpec.base`` so every
+   lowering reproduces them).  Tensor ids are declaration indices.
+   Identical addresses ⇒ identical set/tag mapping, MSHR merges, and
+   eviction interleaving.  Allocator contract: ``retire`` is only
+   called after the round holding the tensor's final access has been
+   emitted, so a recycled region's new tensor is never co-accessed
+   with its predecessor in one round.
 2. **Seen-bitmap recycling** — the monolithic layout gives every tensor
    its own dense range forever; the stream recycles a retired tensor's
    range through a size-keyed free list, but only after a *flush
@@ -57,14 +68,15 @@ from repro.core.traces import CompiledTrace
 from repro.core.traces import Step
 from repro.core.traces import Trace
 
+from .addr import AddressAllocator
+from .addr import BumpAllocator
+from .addr import Region
 from .ir import DataflowSpec
 from .ir import LINE_BYTES
 from .ir import SpecBuilder
 
 #: default flush budget: pre-merge line requests buffered per window
 DEFAULT_CHUNK_LINES = 1 << 18
-
-_ALLOC_BASE = 1 << 30       # matches lower._Allocator (non-degenerate tags)
 
 #: one core's contribution to a round: (core, loads, stores, flops) with
 #: loads/stores as sequences of (tensor_name, tile_index)
@@ -99,17 +111,31 @@ class SpecEmitter:
     """
 
     def __init__(self, name: str, n_cores: int,
-                 line_bytes: int = LINE_BYTES):
+                 line_bytes: int = LINE_BYTES,
+                 allocator: Optional[AddressAllocator] = None):
         self._b = SpecBuilder(name, n_cores, line_bytes=line_bytes)
         self._n_cores = n_cores
+        # with no allocator the spec keeps implicit bases and the
+        # lowering's default bump allocation lays it out (the historical
+        # byte-identical path); an explicit allocator is run here and
+        # its bases are baked into the spec (``TensorSpec.base``)
+        self.allocator = allocator
+        self._regions: Dict[str, Region] = {}
+        if allocator is not None:
+            self._b.allocator = allocator.name
         self.rounds = 0
 
     def declare(self, name: str, *, size_bytes: int, tile_bytes: int,
                 n_acc: int, bypass: bool = False, sharers: int = 1,
                 epoch: Tuple[int, int] = (0, 0)) -> None:
+        base = None
+        if self.allocator is not None:
+            region = self.allocator.alloc(size_bytes, tile_bytes)
+            self._regions[name] = region
+            base = region.base
         self._b.tensor(name, size_bytes=size_bytes, tile_bytes=tile_bytes,
                        n_acc=n_acc, bypass=bypass, sharers=sharers,
-                       epoch=epoch)
+                       epoch=epoch, base=base)
 
     def emit_round(self, steps: Sequence[RoundStep]
                    ) -> Optional[ReplaySegment]:
@@ -125,7 +151,14 @@ class SpecEmitter:
         return None
 
     def retire(self, name: str) -> None:
-        pass                      # monolithic layout never recycles
+        """Return the tensor's region to the allocator (immediately: the
+        driver only retires after the final access round is emitted, so
+        a recycled region is never co-accessed with its predecessor).
+        Without an explicit allocator this is a no-op — the monolithic
+        bump layout never recycles."""
+        region = self._regions.pop(name, None)
+        if region is not None and self.allocator is not None:
+            self.allocator.free(region)
 
     def finish(self) -> Optional[ReplaySegment]:
         return None
@@ -140,6 +173,7 @@ class _LiveTensor:
     meta: TensorMeta
     dense_off: int
     n_lines: int
+    region: Region
 
 
 class StreamEmitter:
@@ -153,15 +187,19 @@ class StreamEmitter:
 
     def __init__(self, name: str, n_cores: int, *,
                  chunk_lines: int = DEFAULT_CHUNK_LINES,
-                 line_bytes: int = LINE_BYTES):
+                 line_bytes: int = LINE_BYTES,
+                 allocator: Optional[AddressAllocator] = None):
         if chunk_lines <= 0:
             raise ValueError("chunk_lines must be positive")
         self.name = name
         self.n_cores = n_cores
         self.chunk_lines = chunk_lines
         self.line_bytes = line_bytes
-        # replicated bump allocator (see module docstring, invariant 1)
-        self._addr_next = _ALLOC_BASE
+        # the address-space policy (module docstring, invariant 1);
+        # the default BumpAllocator reproduces the monolithic lowering's
+        # layout bit-exactly
+        self.allocator = allocator if allocator is not None \
+            else BumpAllocator()
         self._next_tid = 0
         self._live: Dict[str, _LiveTensor] = {}
         # window state -------------------------------------------------
@@ -200,8 +238,8 @@ class StreamEmitter:
             raise ValueError(
                 f"{self.name}: tensor {name!r} tile {tile_bytes} not a "
                 f"multiple of line {self.line_bytes}")
-        base = (self._addr_next + tile_bytes - 1) // tile_bytes * tile_bytes
-        self._addr_next = base + size_bytes
+        region = self.allocator.alloc(size_bytes, tile_bytes)
+        base = region.base
         tid = self._next_tid
         self._next_tid += 1
         n_lines = size_bytes // self.line_bytes
@@ -218,7 +256,7 @@ class StreamEmitter:
                           size_bytes=size_bytes, tile_bytes=tile_bytes,
                           n_acc=n_acc, bypass_all=bypass)
         lt = _LiveTensor(tid=tid, meta=meta, dense_off=off,
-                         n_lines=n_lines)
+                         n_lines=n_lines, region=region)
         self._live[name] = lt
         self._window_metas[tid] = meta
         self._window_dense[tid] = off
@@ -253,12 +291,15 @@ class StreamEmitter:
 
     def retire(self, name: str) -> None:
         """Mark a tensor finished: its TMU entry is cleared after the
-        window holding its final rounds, and its seen range becomes
+        window holding its final rounds, its seen range becomes
         recyclable at the next flush boundary (never within the window
-        that still references it)."""
+        that still references it), and its address region returns to
+        the allocator immediately (safe by the retire-after-last-access
+        contract; a no-op under bump allocation)."""
         lt = self._live.pop(name)
         self._clears.append(lt.tid)
         self._quarantine.append((lt.n_lines, lt.dense_off))
+        self.allocator.free(lt.region)
 
     def finish(self) -> Optional[ReplaySegment]:
         """Flush whatever remains (possibly a round-less trailer that

@@ -221,6 +221,24 @@ def _serve_replay(full: bool, n_cores: int) -> SuiteCase:
         expect_dbp_win=True)
 
 
+def _serve_replay_pooled(full: bool, n_cores: int) -> SuiteCase:
+    # same traffic as serve-replay, but KV pages come from the fixed
+    # page pool instead of the monotone bump stream: retired requests'
+    # regions are recycled, so `tag[B_BITS-1:0]` tiers stay correlated
+    # with liveness at serving scale (the at-tier recovery the pooled
+    # allocator exists for — DESIGN.md §13)
+    from repro.serve.replay import ReplayConfig, replay_spec
+    from repro.serve.traffic import TrafficConfig
+    traffic = TrafficConfig(n_requests=128 if full else 96, seed=7,
+                            process="bursty")
+    spec, _ = replay_spec(traffic, ReplayConfig(n_cores=n_cores,
+                                                allocator="pooled"))
+    return SuiteCase(
+        "serve-replay-pooled", spec,
+        SimConfig(n_cores=n_cores, llc_bytes=128 * 1024),
+        expect_dbp_win=True)
+
+
 #: key → builder thunk, in suite order; ``build_suite`` materializes all
 #: of them, ``suite_case`` exactly one
 _REGISTRY: Dict[str, Callable[[bool, int], SuiteCase]] = {
@@ -237,6 +255,7 @@ _REGISTRY: Dict[str, Callable[[bool, int], SuiteCase]] = {
     "mt-prefill-decode": _mt_prefill_decode,
     "mt-spec-ssd": _mt_spec_ssd,
     "serve-replay": _serve_replay,
+    "serve-replay-pooled": _serve_replay_pooled,
 }
 
 

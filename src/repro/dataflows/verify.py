@@ -84,6 +84,10 @@ class Rule:
     title: str
     assumption: str
     consumer: str
+    #: which address-space strategies the rule applies to: "any", or a
+    #: specific allocator name ("bump" for the monotone-base invariant —
+    #: a recycling allocator legitimately re-issues lower addresses)
+    allocator: str = "any"
 
 
 #: the rule inventory — single source of truth for codes, severities, and
@@ -157,11 +161,14 @@ RULES: Dict[str, Rule] = {r.code: r for r in [
          "(the PR 8 bump-allocator at+dbp decay)",
          "anti-thrashing tier protection (at)"),
     Rule("DCO210", ERROR, "tensor address regions overlap",
-         "assigned [base, end) ranges are disjoint",
+         "assigned [base, end) ranges are disjoint among concurrently-"
+         "live tensors (a recycling allocator may reuse a range only "
+         "after its previous owner's last access)",
          "every address-level consumer; event attribution"),
     Rule("DCO211", ERROR, "base addresses not monotone",
          "declaration order = ascending base order (bump allocation)",
-         "EventSink.register_tensors; StreamEmitter recycling"),
+         "EventSink.register_tensors; StreamEmitter recycling",
+         allocator="bump"),
     Rule("DCO212", ERROR, "tenant region misaligned",
          "each tenant's first tensor is aligned to tenant_region_align "
          "so no dead-id tag region straddles two tenants",
@@ -223,6 +230,10 @@ class VerifyResult:
 
     spec_name: str
     diagnostics: List[Diagnostic] = field(default_factory=list)
+    #: uncapped per-rule fire counts (``diagnostics`` stores at most
+    #: MAX_DIAGS_PER_RULE per code; gates that compare counts across
+    #: allocators — the replay-scale DCO202 check — need the real total)
+    rule_counts: Dict[str, int] = field(default_factory=dict)
 
     @property
     def errors(self) -> List[Diagnostic]:
@@ -241,6 +252,13 @@ class VerifyResult:
         for d in self.diagnostics:
             out[d.code] = out.get(d.code, 0) + 1
         return out
+
+    def count(self, code: str) -> int:
+        """Uncapped fire count for ``code`` (falls back to the stored-
+        diagnostic tally when the pass predates the counter)."""
+        if code in self.rule_counts:
+            return self.rule_counts[code]
+        return sum(1 for d in self.diagnostics if d.code == code)
 
     def by_code(self, code: str) -> List[Diagnostic]:
         return [d for d in self.diagnostics if d.code == code]
@@ -539,7 +557,17 @@ def _epoch_rules(spec: DataflowSpec, facts: _ScheduleFacts,
 
 def _layout_rules(spec: DataflowSpec, metas: Sequence[TensorMeta],
                   em: _Emitter, errors_only: bool, num_sets: int,
-                  params: TMUParams) -> None:
+                  params: TMUParams,
+                  facts: Optional[_ScheduleFacts] = None) -> None:
+    if spec.allocator != "bump":
+        # recycling allocator: declaration order no longer implies
+        # address order and ranges may legitimately recur across
+        # generations — the layout tier switches to liveness-window
+        # semantics (DCO211 does not apply at all)
+        _meta_rules_pooled(spec, metas, em, facts)
+        if not errors_only:
+            _generation_rules_pooled(spec, metas, em, num_sets, params)
+        return
     _meta_rules(spec, metas, em)
     if errors_only:
         return
@@ -640,6 +668,12 @@ def _meta_rules(spec: DataflowSpec, metas: Sequence[TensorMeta],
         end = m.base_addr + m.size_bytes
         if max_end is None or end > max_end:
             max_end, max_name = end, name
+    _tenant_align_rules(spec, metas, em)
+
+
+def _tenant_align_rules(spec: DataflowSpec, metas: Sequence[TensorMeta],
+                        em: _Emitter) -> None:
+    """DCO212 — allocator-independent tenant-boundary alignment."""
     if spec.tenant_of_tensor is not None and spec.tenant_region_align:
         align = spec.tenant_region_align
         prev_tenant = None
@@ -652,6 +686,93 @@ def _meta_rules(spec: DataflowSpec, metas: Sequence[TensorMeta],
                         f"a dead-id tag region straddles two tenants",
                         tensor=t.name)
             prev_tenant = tenant
+
+
+def _meta_rules_pooled(spec: DataflowSpec, metas: Sequence[TensorMeta],
+                       em: _Emitter,
+                       facts: Optional[_ScheduleFacts]) -> None:
+    """DCO210/DCO212 under a recycling allocator.
+
+    Two tensors may occupy the same ``[base, end)`` range when the
+    region was recycled between generations; the hazard is overlap
+    while both are *live*, so the check intersects address ranges with
+    schedule round windows.  Tensors the schedule never touches have no
+    window and cannot conflict."""
+    fr = facts.first_round if facts is not None else {}
+    lr = facts.last_round if facts is not None else {}
+    rows = []
+    for m, t in zip(metas, spec.tensors):
+        f = fr.get(t.name)
+        if f is None:
+            continue
+        rows.append((m.base_addr, m.base_addr + m.size_bytes,
+                     f, lr[t.name], t.name))
+    rows.sort()
+    for i, (b0, e0, f0, l0, n0) in enumerate(rows):
+        for b1, e1, f1, l1, n1 in rows[i + 1:]:
+            if b1 >= e0:
+                break              # base-sorted: nothing later overlaps
+            if not (l0 < f1 or l1 < f0):
+                em.emit("DCO210",
+                        f"[0x{b1:x}, 0x{e1:x}) overlaps {n0!r} "
+                        f"([0x{b0:x}, 0x{e0:x})) while both are live "
+                        f"(rounds [{f1},{l1}] vs [{f0},{l0}]): the "
+                        f"allocator recycled a region before its "
+                        f"previous owner's last access", tensor=n1,
+                        round=max(f0, f1))
+    _tenant_align_rules(spec, metas, em)
+
+
+def _generation_rules_pooled(spec: DataflowSpec,
+                             metas: Sequence[TensorMeta], em: _Emitter,
+                             num_sets: int, params: TMUParams) -> None:
+    """DCO201/DCO202 as *pool-coverage* metrics under recycling.
+
+    With address reuse, a tier (or dead-id) collision is a fresh
+    aliasing event only when a tensor claims a previously-unused tag
+    block whose tier / dead-id value is already taken — a recycled
+    block inherits its own history rather than aliasing someone else's.
+    Once the pool's tag blocks are all warmed up no tensor can fire
+    again, so both counts are bounded by the pool footprint and stay
+    flat in request count.  A bump layout fails this signature: fresh
+    addresses forever mean fresh tag blocks forever, and the counts
+    grow with every retired generation (the PR 8 at+dbp decay) — the
+    gap is the replay gate's acceptance metric."""
+    line = spec.line_bytes
+    n_tiers = 1 << params.b_bits
+    width = params.d_msb - params.d_lsb + 1
+    used_tags: set = set()
+    used_tiers: set = set()
+    used_rids: set = set()
+    for m, t in zip(metas, spec.tensors):
+        if t.bypass:
+            continue
+        tag0 = (m.base_addr // line) // num_sets
+        tag1 = ((m.base_addr + m.size_bytes - 1) // line) // num_sets
+        new_tags = [tag for tag in range(tag0, tag1 + 1)
+                    if tag not in used_tags]
+        if not new_tags:
+            continue
+        new_tiers = {tag & (n_tiers - 1) for tag in new_tags}
+        new_rids = {(tag >> params.d_lsb) & ((1 << width) - 1)
+                    for tag in new_tags}
+        rid_hits = sorted(new_rids & used_rids)
+        if rid_hits:
+            em.emit("DCO201",
+                    f"claims {len(new_tags)} fresh tag block(s) whose "
+                    f"dead-id value(s) {rid_hits[:4]} are already in "
+                    f"use: a retirement there marks another "
+                    f"generation's lines dead", tensor=t.name)
+        tier_hits = sorted(new_tiers & used_tiers)
+        if tier_hits:
+            em.emit("DCO202",
+                    f"claims fresh tag block(s) on already-used "
+                    f"tag[{params.b_bits - 1}:0] tier value(s) "
+                    f"{tier_hits}: at tier protection dilutes as the "
+                    f"address footprint grows", tensor=t.name)
+        used_tags.update(new_tags)
+        used_tiers |= new_tiers
+        used_rids |= new_rids
 
 
 # ---------------------------------------------------------------------------
@@ -691,8 +812,11 @@ def verify_spec(spec: DataflowSpec, *, sim_cfg=None,
     if not errors_only:
         _epoch_rules(spec, facts, em)
     metas = list(assign_addresses(spec).values())
-    _layout_rules(spec, metas, em, errors_only, num_sets, params)
+    _layout_rules(spec, metas, em, errors_only, num_sets, params,
+                  facts=facts)
     res.diagnostics.extend(em.diags)
+    for code, n in em._per_rule.items():
+        res.rule_counts[code] = res.rule_counts.get(code, 0) + n
     res.sort()
     return res
 
@@ -733,12 +857,25 @@ class StreamVerifier:
     ``n_acc`` (DCO101/DCO102).  Generation aliasing (DCO202) is tracked
     as tier values of *new* tensors colliding with tiers of already
     *retired* ones — the bump allocator's PR 8 decay, observed live.
+
+    ``allocator="pooled"`` switches the layout tier to the recycling
+    semantics of :func:`_meta_rules_pooled` / :func:`
+    _generation_rules_pooled`, evaluated incrementally: DCO210 checks
+    each declaration against the *live* region set (a region retiring
+    in the same window is a legitimate hand-off, mirroring ``EventSink.
+    register_tensors``), DCO211 does not apply, and DCO201/DCO202 fire
+    only when a declaration claims previously-unused tag blocks on
+    already-used dead-id / tier values.  Declaration order equals the
+    monolithic spec's, so the streamed counts match ``verify_spec`` on
+    the same replay.
     """
 
     def __init__(self, name: str, *, line_bytes: int = 128, sim_cfg=None,
-                 params: Optional[TMUParams] = None):
+                 params: Optional[TMUParams] = None,
+                 allocator: str = "bump"):
         self.params = params or TMUParams()
         self.line_bytes = line_bytes
+        self.allocator = allocator
         if sim_cfg is None:
             self.num_sets = _num_sets(4 * 2 ** 20, line_bytes, 8)
         else:
@@ -753,13 +890,22 @@ class StreamVerifier:
         self._tier_bits: Dict[int, int] = {}
         self._retired_tiers = 0
         self._counts: Dict[Tuple[int, int], int] = defaultdict(int)
+        # pooled-mode state: live [base, end) per tid + pool coverage
+        self._live_regions: Dict[int, Tuple[int, int]] = {}
+        self._used_tags: set = set()
+        self._used_tiers: set = set()
+        self._used_rids: set = set()
         self.segments = 0
 
-    def _tiers_of(self, meta: TensorMeta) -> int:
-        n_tiers = 1 << self.params.b_bits
+    def _tag_range(self, meta: TensorMeta) -> Tuple[int, int]:
         tag0 = (meta.base_addr // self.line_bytes) // self.num_sets
         tag1 = ((meta.base_addr + meta.size_bytes - 1)
                 // self.line_bytes) // self.num_sets
+        return tag0, tag1
+
+    def _tiers_of(self, meta: TensorMeta) -> int:
+        n_tiers = 1 << self.params.b_bits
+        tag0, tag1 = self._tag_range(meta)
         if tag1 - tag0 + 1 >= n_tiers:
             return (1 << n_tiers) - 1
         bits = 0
@@ -767,39 +913,96 @@ class StreamVerifier:
             bits |= 1 << (tag & (n_tiers - 1))
         return bits
 
+    def _on_declared_bump(self, meta: TensorMeta, name: str) -> None:
+        em = self._em
+        if self._prev_base is not None:
+            if meta.base_addr <= self._prev_base:
+                em.emit("DCO211",
+                        f"base 0x{meta.base_addr:x} not above "
+                        f"predecessor t{self._prev_tid} "
+                        f"(0x{self._prev_base:x})", tensor=name)
+            if meta.base_addr < self._prev_end:
+                em.emit("DCO210",
+                        f"[0x{meta.base_addr:x}, ...) overlaps "
+                        f"t{self._prev_tid} ending at "
+                        f"0x{self._prev_end:x}", tensor=name)
+        self._prev_base = meta.base_addr
+        self._prev_end = meta.base_addr + meta.size_bytes
+        self._prev_tid = meta.tensor_id
+        if not meta.bypass_all:
+            tiers = self._tiers_of(meta)
+            self._tier_bits[meta.tensor_id] = tiers
+            if tiers & self._retired_tiers:
+                em.emit("DCO202",
+                        f"tier values recur from already-retired "
+                        f"generations (bump allocation never reuses "
+                        f"addresses, so tag[{self.params.b_bits - 1}"
+                        f":0] wrapped)", tensor=name)
+
+    def _on_declared_pooled(self, meta: TensorMeta, name: str,
+                            retiring: set) -> None:
+        em = self._em
+        tid = meta.tensor_id
+        base, end = meta.base_addr, meta.base_addr + meta.size_bytes
+        for lt, (ls, le) in self._live_regions.items():
+            if lt == tid or lt in retiring:
+                continue
+            if base < le and ls < end:
+                em.emit("DCO210",
+                        f"[0x{base:x}, 0x{end:x}) overlaps the live "
+                        f"region [0x{ls:x}, 0x{le:x}) of t{lt}: the "
+                        f"allocator recycled a region still in use",
+                        tensor=name)
+                break
+        self._live_regions[tid] = (base, end)
+        if meta.bypass_all:
+            return
+        p = self.params
+        n_tiers = 1 << p.b_bits
+        width = p.d_msb - p.d_lsb + 1
+        tag0, tag1 = self._tag_range(meta)
+        new_tags = [tag for tag in range(tag0, tag1 + 1)
+                    if tag not in self._used_tags]
+        if not new_tags:
+            return
+        new_tiers = {tag & (n_tiers - 1) for tag in new_tags}
+        new_rids = {(tag >> p.d_lsb) & ((1 << width) - 1)
+                    for tag in new_tags}
+        rid_hits = sorted(new_rids & self._used_rids)
+        if rid_hits:
+            em.emit("DCO201",
+                    f"claims {len(new_tags)} fresh tag block(s) whose "
+                    f"dead-id value(s) {rid_hits[:4]} are already in "
+                    f"use: a retirement there marks another "
+                    f"generation's lines dead", tensor=name)
+        tier_hits = sorted(new_tiers & self._used_tiers)
+        if tier_hits:
+            em.emit("DCO202",
+                    f"claims fresh tag block(s) on already-used "
+                    f"tag[{p.b_bits - 1}:0] tier value(s) "
+                    f"{tier_hits}: at tier protection dilutes as the "
+                    f"address footprint grows", tensor=name)
+        self._used_tags.update(new_tags)
+        self._used_tiers |= new_tiers
+        self._used_rids |= new_rids
+
     def on_segment(self, seg: "ReplaySegment") -> None:
         em = self._em
+        pooled = self.allocator != "bump"
+        retiring = set(seg.clear_tids) if pooled else ()
         for meta in seg.new_tensors:
             tid = meta.tensor_id
             name = f"t{tid}"
-            if self._prev_base is not None:
-                if meta.base_addr <= self._prev_base:
-                    em.emit("DCO211",
-                            f"base 0x{meta.base_addr:x} not above "
-                            f"predecessor t{self._prev_tid} "
-                            f"(0x{self._prev_base:x})", tensor=name)
-                if meta.base_addr < self._prev_end:
-                    em.emit("DCO210",
-                            f"[0x{meta.base_addr:x}, ...) overlaps "
-                            f"t{self._prev_tid} ending at "
-                            f"0x{self._prev_end:x}", tensor=name)
-            self._prev_base = meta.base_addr
-            self._prev_end = meta.base_addr + meta.size_bytes
-            self._prev_tid = tid
+            if pooled:
+                self._on_declared_pooled(meta, name, retiring)
+            else:
+                self._on_declared_bump(meta, name)
             self._meta[tid] = meta
-            if not meta.bypass_all:
-                tiers = self._tiers_of(meta)
-                self._tier_bits[tid] = tiers
-                if tiers & self._retired_tiers:
-                    em.emit("DCO202",
-                            f"tier values recur from already-retired "
-                            f"generations (bump allocation never reuses "
-                            f"addresses, so tag[{self.params.b_bits - 1}"
-                            f":0] wrapped)", tensor=name)
         ct = seg.ct
         for tid, tile in zip(ct.tll_tids.tolist(), ct.tll_tiles.tolist()):
             self._counts[(tid, tile)] += 1
         for tid in seg.clear_tids:
+            self._live_regions.pop(tid, None)
             meta = self._meta.pop(tid, None)
             if meta is None or meta.bypass_all:
                 continue
@@ -832,7 +1035,8 @@ class StreamVerifier:
         self.segments += 1
 
     def finish(self) -> VerifyResult:
-        res = VerifyResult(self._em.spec_name, list(self._em.diags))
+        res = VerifyResult(self._em.spec_name, list(self._em.diags),
+                          rule_counts=dict(self._em._per_rule))
         res.sort()
         return res
 
@@ -944,5 +1148,6 @@ def cross_check_case(case: "SuiteCase",
 def rules_inventory() -> List[Dict[str, str]]:
     """The rule table as plain dicts (CLI/report rendering)."""
     return [{"code": r.code, "severity": r.severity, "title": r.title,
-             "assumption": r.assumption, "consumer": r.consumer}
+             "assumption": r.assumption, "consumer": r.consumer,
+             "allocator": r.allocator}
             for r in RULES.values()]

@@ -36,6 +36,8 @@ from repro.core.policies import named_policy
 from repro.core.simulator import SimConfig
 from repro.core.simulator import SimResult
 from repro.core.simulator import Simulator
+from repro.dataflows.addr import BUMP
+from repro.dataflows.addr import make_allocator
 from repro.dataflows.stream import DEFAULT_CHUNK_LINES
 from repro.dataflows.stream import ReplaySegment
 from repro.dataflows.stream import SpecEmitter
@@ -60,6 +62,15 @@ class ReplayConfig:
     flops_per_byte: float = 2.0
     #: hard safety ceiling on replay rounds (None: unbounded)
     max_rounds: Optional[int] = None
+    #: address-space strategy (repro.dataflows.addr): "bump" mints the
+    #: historical monotone layout; "pooled" recycles retired KV regions
+    #: from a fixed page pool so tag-derived TMU state (anti-thrashing
+    #: tiers, dead ids) keeps covering the live working set at scale
+    allocator: str = "bump"
+    #: pooled-allocator pool size, in pages of ``page_bytes``.  A fixed
+    #: config knob (not derived from the realized stream) so streamed
+    #: and monolithic runs of one traffic seed share layouts exactly.
+    pool_pages: int = 2048
 
 
 @dataclass
@@ -280,16 +291,30 @@ def replay_spec(traffic: TrafficConfig,
     (suite/conformance registration path).  Returns ``(spec, log)``."""
     rcfg = rcfg or ReplayConfig()
     eng = ReplayEngine(RequestStream(traffic), rcfg)
-    emitter = SpecEmitter(_replay_name(traffic), rcfg.n_cores,
-                          line_bytes=rcfg.line_bytes)
+    emitter = SpecEmitter(_replay_name(traffic, rcfg), rcfg.n_cores,
+                          line_bytes=rcfg.line_bytes,
+                          allocator=_replay_allocator(rcfg))
     for _ in eng.drive(emitter):
         pass
     return emitter.build(), eng.log
 
 
-def _replay_name(traffic: TrafficConfig) -> str:
-    return (f"serve-replay-{traffic.process}"
+def _replay_allocator(rcfg: ReplayConfig):
+    """Fresh allocator for one replay run; ``None`` for bump, which
+    keeps the emitters on their historical implicit-base path (layouts
+    byte-identical to the pre-allocator pipeline)."""
+    if rcfg.allocator == BUMP:
+        return None
+    return make_allocator(rcfg.allocator, page_bytes=rcfg.page_bytes,
+                          pool_pages=rcfg.pool_pages)
+
+
+def _replay_name(traffic: TrafficConfig, rcfg: ReplayConfig) -> str:
+    name = (f"serve-replay-{traffic.process}"
             f"-n{traffic.n_requests}-s{traffic.seed}")
+    if rcfg.allocator != BUMP:
+        name += f"-{rcfg.allocator}"
+    return name
 
 
 def run_replay(traffic: TrafficConfig, policy,
@@ -323,19 +348,21 @@ def run_replay(traffic: TrafficConfig, policy,
         raise ValueError("ReplayConfig.n_cores must match SimConfig")
     pol = named_policy(policy) if isinstance(policy, str) else policy
     eng = ReplayEngine(RequestStream(traffic), rcfg)
-    name = _replay_name(traffic)
+    name = _replay_name(traffic, rcfg)
     sim = Simulator(cfg, pol)
     diags = None
     if mode == "stream":
         emitter = StreamEmitter(name, rcfg.n_cores,
                                 chunk_lines=chunk_lines,
-                                line_bytes=rcfg.line_bytes)
+                                line_bytes=rcfg.line_bytes,
+                                allocator=_replay_allocator(rcfg))
         segs = eng.drive(emitter)
         verifier = None
         if verify:
             from repro.dataflows.verify import StreamVerifier
             verifier = StreamVerifier(name, line_bytes=rcfg.line_bytes,
-                                      sim_cfg=cfg)
+                                      sim_cfg=cfg,
+                                      allocator=rcfg.allocator)
 
             def audited(source=segs, v=verifier):
                 for seg in source:
@@ -353,7 +380,8 @@ def run_replay(traffic: TrafficConfig, policy,
     elif mode == "monolithic":
         from repro.dataflows import lower_to_trace
         emitter = SpecEmitter(name, rcfg.n_cores,
-                              line_bytes=rcfg.line_bytes)
+                              line_bytes=rcfg.line_bytes,
+                              allocator=_replay_allocator(rcfg))
         for _ in eng.drive(emitter):
             pass
         spec = emitter.build()

@@ -262,3 +262,34 @@ def test_line_addr_of_inverts_set_mapping(hash_sets):
     sets = geom.set_of(addrs)
     tags = geom.tag_of(addrs)
     assert np.array_equal(geom.line_addr_of(sets, tags), addrs)
+
+
+# ---------------------------------------------------------------------------
+# live-region registration (allocator-aware overlap check)
+# ---------------------------------------------------------------------------
+def test_register_tensors_rejects_live_overlap_with_names():
+    """A mid-stream registration colliding with a still-live region is
+    an allocator bug; the error names the offender, its base, and the
+    live region it collides with."""
+    from repro.core.tmu import TensorMeta
+
+    def meta(tid, base, size):
+        return TensorMeta(tensor_id=tid, base_addr=base, size_bytes=size,
+                          tile_bytes=size, n_acc=1)
+
+    sink = EventSink()
+    sink.register_tensors([meta(1, 0x10000, 0x800)])
+    with pytest.raises(ValueError) as exc:
+        sink.register_tensors([meta(2, 0x10400, 0x800)])
+    msg = str(exc.value)
+    assert "tensor 2" in msg and "0x10400" in msg
+    assert "[0x10000, 0x10800)" in msg and "tensor 1" in msg
+
+    # released regions may be recycled...
+    sink.release_tensors([1])
+    sink.register_tensors([meta(3, 0x10000, 0x800)])
+    # ...and a same-segment retirement exempts its region in-window
+    with pytest.raises(ValueError):
+        sink.register_tensors([meta(4, 0x10000, 0x800)])
+    sink.register_tensors([meta(4, 0x10000, 0x800)],
+                          retiring_tids=frozenset({3}))
